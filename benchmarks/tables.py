@@ -1,0 +1,309 @@
+"""One benchmark per paper table/figure (Tables I-VIII, X; Figs 3-5).
+
+Each function evaluates trained proxy models under the paper's exact
+configuration grid and asserts the table's QUALITATIVE claim (ordering /
+closeness of methods).  See benchmarks/common.py for the proxy methodology.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.formats import INT4, INT8, get_format
+from repro.core.gptq import GPTQConfig
+from repro.core.policy import preset
+from repro.models import quant_transforms as qt
+
+MODELS = ["opt-proxy-s", "opt-proxy-m"]
+
+
+def _fp32_ppl(name, model, params, cache={}):
+    if name not in cache:
+        cache[name] = C.eval_ppl(model, params, preset("fp32"))
+    return cache[name]
+
+
+# ---------------------------------------------------------------- Table I
+def table1(rep: C.Report, steps: int):
+    """W4A4: static MSE calibration vs ABFP (n=64)."""
+    for name in MODELS:
+        cfg, model, params, _ = C.train_proxy(name, steps)
+        fp = _fp32_ppl(name, model, params)
+        calib = C.calibrated(name, model, params)
+        q = qt.static_qtree(calib, INT4, cfg.n_layers, method="mse")
+        mse = C.eval_ppl(model, params, preset("w4a4_mse"), q=q)
+        abfp = C.eval_ppl(model, params, preset("w4a4_abfp"))
+        rep.row("table1", model=name, fp32=fp, mse=round(mse, 3),
+                abfp=round(abfp, 3))
+        # Proxy-scale note (EXPERIMENTS.md §Benchmarks): the paper's PPL
+        # *cliff* (1130 vs 33) needs the extreme activation outliers of
+        # large-scale-pretrained OPT; 700-step proxies develop the correct
+        # ORDERING (MSE strictly worse than ABFP, ABFP near fp32) but not
+        # the cliff.  The ordering is the transferable claim.
+        rep.claim("table1",
+                  f"{name}: W4A4 static-MSE strictly worse than ABFP; "
+                  "ABFP stays near fp32",
+                  mse > 1.05 * abfp and abfp < 1.3 * fp,
+                  f"mse={mse:.2f} abfp={abfp:.2f} fp={fp:.2f}")
+
+
+# --------------------------------------------------------------- Table II
+def table2(rep: C.Report, steps: int):
+    """4-bit integer vs FP4 (E2M1 / E1M2) weights+activations, ABFP n=64."""
+    for name in MODELS:
+        cfg, model, params, _ = C.train_proxy(name, steps)
+        fp = _fp32_ppl(name, model, params)
+        w4a4 = C.eval_ppl(model, params, preset("w4a4_abfp"))
+        e2m1 = C.eval_ppl(model, params, preset("w4a4_e2m1"))
+        e1m2 = C.eval_ppl(model, params, preset("w4a4_e1m2"))
+        rep.row("table2", model=name, fp32=fp, w4a4=round(w4a4, 3),
+                e2m1=round(e2m1, 3), e1m2=round(e1m2, 3))
+        rep.claim("table2",
+                  f"{name}: E1M2 ~ INT4 under ABFP (near-uniform grid)",
+                  abs(e1m2 - w4a4) / w4a4 < 0.25,
+                  f"int4={w4a4:.2f} e1m2={e1m2:.2f} e2m1={e2m1:.2f}")
+
+
+# -------------------------------------------------------------- Table III
+def table3(rep: C.Report, steps: int, qat_steps: int):
+    """W4A4 accuracy recovery: ABFP vs ABFP-QAT vs ABFP-SQ."""
+    for name in MODELS:
+        cfg, model, params, _ = C.train_proxy(name, steps)
+        fp = _fp32_ppl(name, model, params)
+        pol = preset("w4a4_abfp")
+        abfp = C.eval_ppl(model, params, pol)
+        qp = C.finetune_qat(model, params, pol, steps=qat_steps)
+        qat = C.eval_ppl(model, qp, pol)
+        calib = C.calibrated(name, model, params)
+        sq_params = qt.apply_smoothquant(params, calib)
+        sq = C.eval_ppl(model, sq_params, pol)
+        rep.row("table3", model=name, fp32=fp, abfp=round(abfp, 3),
+                abfp_qat=round(qat, 3), abfp_sq=round(sq, 3))
+        rep.claim("table3",
+                  f"{name}: QAT and SQ both improve over vanilla ABFP",
+                  qat < abfp and sq < abfp * 1.02,
+                  f"abfp={abfp:.2f} qat={qat:.2f} sq={sq:.2f}")
+
+
+# --------------------------------------------------------------- Table IV
+def table4(rep: C.Report, steps: int):
+    """W4A8: static MSE vs ABFP — MSE usable here, ABFP still better."""
+    for name in MODELS:
+        cfg, model, params, _ = C.train_proxy(name, steps)
+        fp = _fp32_ppl(name, model, params)
+        calib = C.calibrated(name, model, params)
+        q = qt.static_qtree(calib, INT8, cfg.n_layers, method="mse")
+        mse = C.eval_ppl(model, params, preset("w4a8_mse"), q=q)
+        abfp = C.eval_ppl(model, params, preset("w4a8_abfp"))
+        rep.row("table4", model=name, fp32=fp, mse=round(mse, 3),
+                abfp=round(abfp, 3))
+        rep.claim("table4",
+                  f"{name}: at W4A8 MSE is usable; ABFP near-baseline",
+                  mse < 20 * fp and abfp < mse and abfp < 1.6 * fp,
+                  f"mse={mse:.2f} abfp={abfp:.2f} fp={fp:.2f}")
+
+
+# ---------------------------------------------------------------- Table V
+def table5(rep: C.Report, steps: int):
+    """INT4 weights + E4M3 acts (ABFP / ABFP-SQ) vs GPTQ W4A16."""
+    for name in MODELS:
+        cfg, model, params, _ = C.train_proxy(name, steps)
+        fp = _fp32_ppl(name, model, params)
+        abfp = C.eval_ppl(model, params, preset("w4_ae4m3_abfp"))
+        calib = C.calibrated(name, model, params, outer=True)
+        sq_params = qt.apply_smoothquant(params, calib)
+        sq = C.eval_ppl(model, sq_params, preset("w4_ae4m3_abfp"))
+        gq_params, _ = qt.apply_gptq(params, calib, INT4, GPTQConfig())
+        gptq = C.eval_ppl(model, gq_params, preset("fp32"))  # W4A16
+        rep.row("table5", model=name, fp32=fp, abfp=round(abfp, 3),
+                abfp_sq=round(sq, 3), gptq_w4a16=round(gptq, 3))
+        rep.claim("table5",
+                  f"{name}: W4-AE4M3 ABFP(-SQ) competitive with GPTQ W4A16",
+                  min(abfp, sq) < gptq * 1.15,
+                  f"abfp={abfp:.2f} sq={sq:.2f} gptq={gptq:.2f}")
+
+
+# --------------------------------------------------------------- Table VI
+def table6(rep: C.Report, steps: int):
+    """E4M3 vs INT8 activations: no significant difference under ABFP."""
+    for name in MODELS:
+        cfg, model, params, _ = C.train_proxy(name, steps)
+        e4m3 = C.eval_ppl(model, params, preset("w4_ae4m3_abfp"))
+        int8 = C.eval_ppl(model, params, preset("w4a8_abfp"))
+        calib = C.calibrated(name, model, params)
+        sq_params = qt.apply_smoothquant(params, calib)
+        e4m3_sq = C.eval_ppl(model, sq_params, preset("w4_ae4m3_abfp"))
+        int8_sq = C.eval_ppl(model, sq_params, preset("w4a8_abfp"))
+        rep.row("table6", model=name, e4m3=round(e4m3, 3),
+                int8=round(int8, 3), e4m3_sq=round(e4m3_sq, 3),
+                int8_sq=round(int8_sq, 3))
+        rep.claim("table6",
+                  f"{name}: E4M3 ~ INT8 activations (no significant gain)",
+                  abs(e4m3 - int8) / int8 < 0.10,
+                  f"e4m3={e4m3:.2f} int8={int8:.2f}")
+
+
+# -------------------------------------------------------------- Table VII
+def table7(rep: C.Report, steps: int, qat_steps: int):
+    """W4A8 recovery: ABFP / ABFP-QAT / ABFP-SQ (vs GPTQ W4A16 column)."""
+    for name in MODELS:
+        cfg, model, params, _ = C.train_proxy(name, steps)
+        fp = _fp32_ppl(name, model, params)
+        pol = preset("w4a8_abfp")
+        abfp = C.eval_ppl(model, params, pol)
+        qp = C.finetune_qat(model, params, pol, steps=qat_steps)
+        qat = C.eval_ppl(model, qp, pol)
+        calib = C.calibrated(name, model, params, outer=True)
+        sq = C.eval_ppl(model, qt.apply_smoothquant(params, calib), pol)
+        gq_params, _ = qt.apply_gptq(params, calib, INT4, GPTQConfig())
+        gptq = C.eval_ppl(model, gq_params, preset("fp32"))
+        rep.row("table7", model=name, fp32=fp, abfp=round(abfp, 3),
+                abfp_qat=round(qat, 3), abfp_sq=round(sq, 3),
+                gptq_w4a16=round(gptq, 3))
+        rep.claim("table7",
+                  f"{name}: QAT/SQ recover W4A8 toward baseline",
+                  qat <= abfp and sq <= abfp * 1.02 and qat < 1.35 * fp,
+                  f"abfp={abfp:.2f} qat={qat:.2f} sq={sq:.2f} fp={fp:.2f}")
+
+
+# ------------------------------------------------------------- Table VIII
+def table8(rep: C.Report, steps: int):
+    """RPTQ (channel-cluster static scales) vs ABFP, W4A4 and W4A8."""
+    for name in MODELS:
+        cfg, model, params, _ = C.train_proxy(name, steps)
+        calib = C.calibrated(name, model, params)
+        q_rptq, _ = qt.rptq_qtree(calib, cfg.n_layers, num_clusters=8)
+        rows = {}
+        for fmt_name, pol_rptq, pol_abfp in (
+            ("w4a4", preset("w4a4_mse"), preset("w4a4_abfp")),
+            ("w4a8", preset("w4a8_mse"), preset("w4a8_abfp")),
+        ):
+            rptq_ppl = C.eval_ppl(model, params, pol_rptq, q=q_rptq)
+            abfp_ppl = C.eval_ppl(model, params, pol_abfp)
+            rows[fmt_name] = (rptq_ppl, abfp_ppl)
+        rep.row("table8", model=name,
+                rptq_w4a4=round(rows["w4a4"][0], 3),
+                abfp_w4a4=round(rows["w4a4"][1], 3),
+                rptq_w4a8=round(rows["w4a8"][0], 3),
+                abfp_w4a8=round(rows["w4a8"][1], 3))
+        rep.claim("table8",
+                  f"{name}: ABFP beats RPTQ at W4A4",
+                  rows["w4a4"][1] < rows["w4a4"][0],
+                  f"abfp={rows['w4a4'][1]:.2f} rptq={rows['w4a4'][0]:.2f}")
+
+
+# ------------------------------------------------------------- Figure 3
+def fig3(rep: C.Report, steps: int):
+    """E1M2 W+A for n=64 vs n=128: larger n hurts, gap shrinks with size."""
+    gaps = {}
+    for name in MODELS:
+        cfg, model, params, _ = C.train_proxy(name, steps)
+        p64 = C.eval_ppl(model, params, preset("w4a4_e1m2", n=64))
+        p128 = C.eval_ppl(model, params, preset("w4a4_e1m2", n=128))
+        gaps[name] = (p128 - p64) / p64
+        rep.row("fig3", model=name, n64=round(p64, 3), n128=round(p128, 3),
+                rel_gap=round(gaps[name], 4))
+        rep.claim("fig3", f"{name}: n=64 no worse than n=128",
+                  p64 <= p128 * 1.02, f"n64={p64:.2f} n128={p128:.2f}")
+
+
+# ----------------------------------------------------------- Figures 4/5
+def fig45(rep: C.Report, steps: int, qat_steps: int):
+    """QAT at n=128 approaches n=64 (W4A4 = Fig 4, W4A8 = Fig 5)."""
+    for fmt, fig in (("w4a4_abfp", "fig4"), ("w4a8_abfp", "fig5")):
+        for name in MODELS:
+            cfg, model, params, _ = C.train_proxy(name, steps)
+            out = {}
+            for n in (64, 128):
+                pol = preset(fmt, n=n)
+                qp = C.finetune_qat(model, params, pol, steps=qat_steps)
+                out[n] = {
+                    "raw": C.eval_ppl(model, params, pol),
+                    "qat": C.eval_ppl(model, qp, pol),
+                }
+            rep.row(fig, model=name,
+                    abfp_n64=round(out[64]["raw"], 3),
+                    qat_n64=round(out[64]["qat"], 3),
+                    abfp_n128=round(out[128]["raw"], 3),
+                    qat_n128=round(out[128]["qat"], 3))
+            rep.claim(fig,
+                      f"{name}: QAT improves both n; n=128-QAT near n=64-QAT",
+                      out[64]["qat"] <= out[64]["raw"] * 1.01
+                      and out[128]["qat"] <= out[128]["raw"] * 1.01
+                      and out[128]["qat"] <= out[64]["qat"] * 1.15,
+                      str({k: {kk: round(vv, 2) for kk, vv in v.items()}
+                           for k, v in out.items()}))
+
+
+# ---------------------------------------------------------------- Table X
+TABLE10_ARCHS = ["qwen2-7b", "gemma2-9b", "mamba2-130m", "zamba2-7b",
+                 "phi3.5-moe-42b-a6.6b", "internvl2-2b"]
+
+
+def table10(rep: C.Report, steps: int):
+    """ABFP W4A4/W4A8 across model families (reduced assigned archs)."""
+    for name in MODELS + TABLE10_ARCHS:
+        # reduced non-OPT archs run eager-unrolled (slower): half budget
+        steps_a = steps if name in MODELS else max(steps // 2, 50)
+        cfg, model, params, _ = C.train_proxy(name, steps_a)
+        fp = C.eval_ppl(model, params, preset("fp32"))
+        w4a4 = C.eval_ppl(model, params, preset("w4a4_abfp"))
+        w4a8 = C.eval_ppl(model, params, preset("w4a8_abfp"))
+        rep.row("table10", model=name, fp32=round(fp, 3),
+                abfp_w4a4=round(w4a4, 3), abfp_w4a8=round(w4a8, 3))
+        rep.claim("table10",
+                  f"{name}: W4A8-ABFP close to FP32 out of the box",
+                  w4a8 < 1.35 * fp and w4a8 <= w4a4 * 1.02,
+                  f"fp={fp:.2f} w4a8={w4a8:.2f} w4a4={w4a4:.2f}")
+
+
+# ------------------------------------------------- beyond-paper ablations
+def output_quant(rep: C.Report, steps: int):
+    """Paper §III supports output quantizers (f_q^y, eqn (9)) 'for alternate
+    hardware configurations' (photonics ADCs) but never evaluates them.
+    Ablation: W4A8-ABFP with int8/e4m3/int4 OUTPUT quantization."""
+    from repro.core.policy import TensorQuant
+
+    for name in MODELS:
+        cfg, model, params, _ = C.train_proxy(name, steps)
+        base = preset("w4a8_abfp")
+        res = {"none": C.eval_ppl(model, params, base)}
+        for fmt in ("int8", "e4m3", "int4"):
+            pol = base.replace(
+                name=f"w4a8_y{fmt}",
+                output=TensorQuant(fmt_name=fmt, scaler="abfp", group=64),
+            )
+            res[fmt] = C.eval_ppl(model, params, pol)
+        rep.row("output_quant", model=name,
+                **{f"y_{k}": round(v, 3) for k, v in res.items()})
+        rep.claim("output_quant",
+                  f"{name}: 8-bit output quant is ~free; 4-bit degrades",
+                  res["int8"] < 1.05 * res["none"]
+                  and res["e4m3"] < 1.05 * res["none"]
+                  and res["int4"] > res["int8"],
+                  str({k: round(v, 2) for k, v in res.items()}))
+
+
+def int8_native(rep: C.Report, steps: int):
+    """Beyond-paper: native int8 MXU compute (codes contracted in int32)
+    must match the paper's QDQ-then-fp-matmul simulation numerically."""
+    for name in MODELS:
+        cfg, model, params, _ = C.train_proxy(name, steps)
+        sim = C.eval_ppl(model, params, preset("w8a8_int8_native")
+                         .replace(compute="fp", attn_bmm=False))
+        native = C.eval_ppl(model, params, preset("w8a8_int8_native"))
+        rep.row("int8_native", model=name, simulated=round(sim, 4),
+                native=round(native, 4))
+        rep.claim("int8_native",
+                  f"{name}: native int8 path == fp-simulated path",
+                  abs(native - sim) / sim < 0.002,
+                  f"sim={sim:.3f} native={native:.3f}")
+
+
+ALL = {
+    "table1": table1, "table2": table2, "table3": table3, "table4": table4,
+    "table5": table5, "table6": table6, "table7": table7, "table8": table8,
+    "fig3": fig3, "fig45": fig45, "table10": table10,
+    "output_quant": output_quant, "int8_native": int8_native,
+}

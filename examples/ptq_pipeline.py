@@ -1,0 +1,79 @@
+"""End-to-end PTQ pipeline on a trained model — the paper's §IV in one file.
+
+    PYTHONPATH=src python examples/ptq_pipeline.py [--steps 400]
+
+1. trains a small OPT-family LM on the synthetic corpus (cached),
+2. calibrates activations (per-site stats + Hessians),
+3. applies every PTQ method from the paper:
+     static MSE | ABFP | ABFP-SmoothQuant | GPTQ | RPTQ | ABFP-QAT
+4. prints the eval-PPL table (compare to paper Tables I/III/V/VIII).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks
+
+import argparse
+
+from benchmarks import common as C
+from repro.core.formats import INT4, INT8
+from repro.core.policy import preset
+from repro.models import quant_transforms as qt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--qat-steps", type=int, default=40)
+    ap.add_argument("--model", default="opt-proxy-s")
+    args = ap.parse_args()
+
+    print(f"training proxy {args.model} ({args.steps} steps, cached)...")
+    cfg, model, params, meta = C.train_proxy(args.model, args.steps)
+    print(f"  final train loss {meta['final_train_loss']:.3f}")
+
+    print("calibrating (4 batches, activation stats + Hessians)...")
+    calib = C.calibrated(args.model, model, params, outer=True)
+
+    rows = [("fp32 baseline", C.eval_ppl(model, params, preset("fp32")))]
+
+    # --- static MSE calibration (Table I/IV) ----------------------------
+    q = qt.static_qtree(calib, INT8, cfg.n_layers, method="mse")
+    rows.append(("W4A8 static-MSE",
+                 C.eval_ppl(model, params, preset("w4a8_mse"), q=q)))
+
+    # --- ABFP (the paper's workhorse) ------------------------------------
+    rows.append(("W4A8 ABFP n=64",
+                 C.eval_ppl(model, params, preset("w4a8_abfp"))))
+    rows.append(("W4A4 ABFP n=64",
+                 C.eval_ppl(model, params, preset("w4a4_abfp"))))
+
+    # --- SmoothQuant folding ---------------------------------------------
+    sq_params = qt.apply_smoothquant(params, calib)
+    rows.append(("W4A8 ABFP-SQ",
+                 C.eval_ppl(model, sq_params, preset("w4a8_abfp"))))
+
+    # --- GPTQ (weights only, fp activations) ------------------------------
+    gq_params, infos = qt.apply_gptq(params, calib, INT4)
+    rows.append(("W4A16 GPTQ",
+                 C.eval_ppl(model, gq_params, preset("fp32"))))
+
+    # --- RPTQ (channel-cluster static scales) ------------------------------
+    q_rptq, _ = qt.rptq_qtree(calib, cfg.n_layers)
+    rows.append(("W4A8 RPTQ",
+                 C.eval_ppl(model, params, preset("w4a8_mse"), q=q_rptq)))
+
+    # --- QAT fine-tuning (eqn (5) PWL-STE) ---------------------------------
+    qat_params = C.finetune_qat(model, params, preset("w4a4_abfp"),
+                                steps=args.qat_steps)
+    rows.append(("W4A4 ABFP-QAT",
+                 C.eval_ppl(model, qat_params, preset("w4a4_abfp"))))
+
+    print(f"\n{'method':22} {'eval PPL':>10}")
+    for name, ppl in rows:
+        print(f"{name:22} {ppl:10.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Quantized continuous-batching serving — the end-to-end inference driver.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+
+1. builds a small LM, trains it briefly so generations are non-trivial,
+2. compresses weights to REAL int8 storage (codes + group scales),
+3. serves a queue of prompts through the slot-based engine with the
+   W4A8-ABFP serving policy (weights pre-quantized offline, KV entries
+   quantized once at write time — the §Perf serving configuration),
+4. verifies the quantized-served completions against straight decode and
+   prints sizes + throughput.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.policy import preset
+from repro.models import serving_transforms as st
+from repro.serve.engine import Request, ServeEngine
+
+
+def tree_bytes(t):
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(t)
+               if hasattr(x, "dtype"))
+
+
+def main():
+    print("training a small LM (cached)...")
+    cfg, model, params, _ = C.train_proxy("opt-proxy-s", steps=300)
+
+    # --- offline: compress weights to int8 codes + scales ----------------
+    base_policy = preset("w4a8_abfp").replace(kv_cache="on_write")
+    comp = st.compress_weights(params, base_policy)
+    policy = st.serving_policy(base_policy)
+    print(f"checkpoint size: dense {tree_bytes(params) / 1e6:.1f} MB -> "
+          f"compressed {tree_bytes(comp) / 1e6:.1f} MB")
+
+    # --- serve -------------------------------------------------------------
+    engine = ServeEngine(model, comp, n_slots=4, max_len=96, policy=policy)
+    rng = np.random.RandomState(0)
+    n_req = 8
+    for uid in range(n_req):
+        plen = int(rng.randint(4, 12))
+        engine.submit(Request(
+            uid=uid,
+            prompt=rng.randint(0, cfg.vocab, plen).astype(np.int32),
+            max_new_tokens=24,
+        ))
+    t0 = time.perf_counter()
+    done = engine.run_until_done()
+    dt = time.perf_counter() - t0
+    total = sum(len(c.tokens) for c in done)
+    print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s, {engine.ticks} engine ticks)")
+
+    # --- verify against straight quantized decode --------------------------
+    sample = next(c for c in done if c.uid == 0)
+    req0_prompt = None
+    rng = np.random.RandomState(0)
+    for uid in range(n_req):
+        plen = int(rng.randint(4, 12))
+        p = rng.randint(0, cfg.vocab, plen).astype(np.int32)
+        if uid == 0:
+            req0_prompt = p
+    import jax.numpy as jnp
+
+    lg, state = model.prefill(comp, {"tokens": jnp.asarray(req0_prompt[None])},
+                              policy, max_len=96)
+    toks = [int(jnp.argmax(lg[0]))]
+    for _ in range(23):
+        cur = jnp.asarray([[toks[-1]]], jnp.int32)
+        lg, state = model.decode_step(comp, cur, state, policy)
+        toks.append(int(jnp.argmax(lg[0])))
+    assert toks == sample.tokens, "engine must match straight decode"
+    print("continuous-batching output == straight decode: OK")
+
+
+if __name__ == "__main__":
+    main()

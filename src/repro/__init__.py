@@ -1,0 +1,11 @@
+"""repro: INT-FP-QSim reproduced as a production-grade JAX/TPU framework.
+
+The paper's contribution — a mixed int/float precision *simulated
+quantization* layer (QDQ around every matmul) with ABFP per-vector scaling,
+calibration, SmoothQuant/GPTQ/RPTQ and QAT — lives in ``repro.core`` and is
+wired as a first-class feature through the model/nn/serving/training stack.
+"""
+
+from repro.version import __version__
+
+__all__ = ["__version__"]

@@ -1,0 +1,12 @@
+"""Checkpointing: atomic pytree save/restore + manager with async writes."""
+
+from repro.checkpoint.store import save_pytree, restore_pytree, list_steps
+from repro.checkpoint.manager import CheckpointManager, CheckpointConfig
+
+__all__ = [
+    "save_pytree",
+    "restore_pytree",
+    "list_steps",
+    "CheckpointManager",
+    "CheckpointConfig",
+]

@@ -1,0 +1,157 @@
+"""Atomic pytree checkpoint store (no orbax offline — hand-rolled).
+
+Layout:  <dir>/step_<N>/
+            manifest.json       # treedef + leaf metadata + user metadata
+            leaf_00000.npy ...  # one .npy per leaf (host-local shards)
+
+Atomicity: write into ``step_<N>.tmp-<pid>`` then ``os.rename`` — a crashed
+writer never leaves a directory that ``list_steps`` would pick up.  This is
+the same commit protocol TensorStore/Orbax use at directory granularity,
+which is the right granularity for single-host CPU and for per-host shard
+dirs on a real pod (each host renames only its own dir; the coordinator
+commits a global BARRIER file last — see ``repro.train.loop``).
+
+Sharded restore: ``restore_pytree(..., sds_tree=...)`` can down/up-cast and
+re-shard leaves onto a new mesh via ``jax.make_array_from_callback``; for
+the CPU container everything is host-local numpy.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_pytree(directory: str, step: int, tree, metadata: dict | None = None,
+                name: str = "state") -> str:
+    """Atomically write ``tree`` under ``directory/step_<step>/<name>``."""
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    final = os.path.join(step_dir, name)
+    tmp = final + f".tmp-{os.getpid()}"
+    os.makedirs(tmp, exist_ok=True)
+
+    paths, leaves, treedef = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "name": name,
+        "metadata": metadata or {},
+        "leaves": [],
+    }
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:  # numpy can't serialize bf16 natively
+            arr = arr.view(np.uint16)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"path": p, "file": fname, "dtype": logical_dtype,
+             "shape": list(arr.shape)}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # commit marker: the step dir is valid once every `name` has renamed;
+    # the caller (manager) writes COMMITTED after all names land.
+    return final
+
+
+def _leaf_files(directory: str, step: int, name: str):
+    final = os.path.join(directory, f"step_{step:08d}", name)
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    return final, manifest
+
+
+def restore_pytree(directory: str, step: int, example_tree,
+                   name: str = "state", shardings=None):
+    """Restore into the structure of ``example_tree``.
+
+    ``example_tree`` may hold ShapeDtypeStructs (zero-alloc restore target)
+    or concrete arrays (shape/dtype validated).  ``shardings``: optional
+    matching tree of NamedShardings — leaves are built per-shard via
+    ``jax.make_array_from_callback`` (elastic restore onto any mesh).
+    """
+    final, manifest = _leaf_files(directory, step, name)
+    paths, leaves, treedef = _flatten_with_paths(example_tree)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    if set(paths) != set(by_path):
+        missing = set(paths) - set(by_path)
+        extra = set(by_path) - set(paths)
+        raise ValueError(
+            f"checkpoint tree mismatch: missing={sorted(missing)[:5]} "
+            f"extra={sorted(extra)[:5]}"
+        )
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_flatten(shardings)[0]
+
+    out = []
+    for i, (p, ex) in enumerate(zip(paths, leaves)):
+        entry = by_path[p]
+        arr = np.load(os.path.join(final, entry["file"]))
+        if entry["dtype"] == "bfloat16":
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        want_shape = tuple(ex.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"{p}: checkpoint shape {arr.shape} != expected {want_shape}"
+            )
+        arr = arr.astype(ex.dtype)
+        if shard_flat is not None:
+            sh = shard_flat[i]
+            out.append(
+                jax.make_array_from_callback(
+                    arr.shape, sh, lambda idx, a=arr: a[idx]
+                )
+            )
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def load_metadata(directory: str, step: int, name: str = "state") -> dict:
+    _, manifest = _leaf_files(directory, step, name)
+    return manifest.get("metadata", {})
+
+
+def list_steps(directory: str) -> list[int]:
+    """Committed steps, ascending (a step is committed iff marker exists)."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            full = os.path.join(directory, d)
+            if os.path.isdir(full) and os.path.exists(
+                os.path.join(full, "COMMITTED")
+            ):
+                steps.append(int(d[len("step_"):]))
+    return sorted(steps)
+
+
+def mark_committed(directory: str, step: int) -> None:
+    path = os.path.join(directory, f"step_{step:08d}", "COMMITTED")
+    with open(path, "w") as f:
+        f.write("ok")
+
+
+def delete_step(directory: str, step: int) -> None:
+    shutil.rmtree(os.path.join(directory, f"step_{step:08d}"),
+                  ignore_errors=True)

@@ -1,0 +1,6 @@
+"""Architecture configs: the 10 assigned archs + the paper's OPT family."""
+
+from repro.configs.base import ArchConfig, ShapeSpec, SHAPES
+from repro.configs.registry import get_config, list_configs
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "get_config", "list_configs"]

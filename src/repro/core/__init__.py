@@ -1,0 +1,7 @@
+"""INT-FP-QSim core: formats, quantizers, ABFP, calibration, PTQ, QAT."""
+
+from repro.core import formats
+from repro.core.formats import get_format
+from repro.core.policy import QuantPolicy, TensorQuant, preset
+
+__all__ = ["formats", "get_format", "QuantPolicy", "TensorQuant", "preset"]

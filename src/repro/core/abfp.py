@@ -1,0 +1,88 @@
+"""Adaptive Block Floating Point (paper §II-B2, eqn (4)).
+
+ABFP dynamically scales vectors of length ``n`` along the dot-product
+(contraction) dimension with per-vector ``max(|x|)`` scales kept in BF16
+(the paper stores scales in BF16; a second-level scale quantization from
+VS-Quant is explicitly out of scope, as in the paper).
+
+On TPU this is group-wise quantization along K with MXU-friendly n ∈ {64,128}
+(see DESIGN.md §2 for the mapping from the paper's column/row convention).
+
+All functions are pure jnp: they jit, vmap, grad (via the PWL STE) and shard.
+The Pallas kernels in ``repro.kernels`` implement the fused fast path and are
+checked against these functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import Format
+from repro.core.quantize import maybe_ste
+
+_EPS = 1e-12
+
+
+def _to_groups(x: jnp.ndarray, axis: int, n: int):
+    """Reshape ``axis`` into (groups, n), padding with zeros if needed.
+
+    Returns (grouped, pad, moved_axis_last_shape) where ``grouped`` has shape
+    x.shape with ``axis`` replaced by (G, n) moved to the last two dims.
+    """
+    axis = axis % x.ndim
+    k = x.shape[axis]
+    pad = (-k) % n
+    xm = jnp.moveaxis(x, axis, -1)
+    if pad:
+        xm = jnp.pad(xm, [(0, 0)] * (xm.ndim - 1) + [(0, pad)])
+    g = (k + pad) // n
+    return xm.reshape(*xm.shape[:-1], g, n), pad, k
+
+
+def _from_groups(xg: jnp.ndarray, axis: int, pad: int, k: int, ndim: int):
+    axis = axis % ndim
+    xm = xg.reshape(*xg.shape[:-2], xg.shape[-2] * xg.shape[-1])
+    if pad:
+        xm = xm[..., :k]
+    return jnp.moveaxis(xm, -1, axis)
+
+
+def abfp_scales(x: jnp.ndarray, axis: int = -1, n: int = 64,
+                scale_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Per-vector max scales (eqn (4)); shape = x.shape with axis -> G.
+
+    Scales are treated as constants under differentiation (the PWL STE of
+    eqn (5) differentiates w.r.t. x only), hence the stop_gradient.
+    """
+    xg, _, _ = _to_groups(jax.lax.stop_gradient(x), axis, n)
+    alpha = jnp.max(jnp.abs(xg), axis=-1)
+    # BF16 scales (paper: "scales themselves are left in BF16");
+    # round-to-nearest — a max that rounds down is clipped to the top code.
+    a16 = alpha.astype(scale_dtype)
+    return jnp.maximum(a16.astype(jnp.float32), _EPS)
+
+
+def abfp_qdq(x: jnp.ndarray, fmt: Format, axis: int = -1, n: int = 64,
+             ste: bool = False, scale_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Simulated ABFP quantization of ``x`` along ``axis`` (groups of n)."""
+    xg, pad, k = _to_groups(x, axis, n)
+    alpha = abfp_scales(x, axis, n, scale_dtype)[..., None]
+    yg = maybe_ste(xg, alpha, fmt, ste)
+    return _from_groups(yg, axis, pad, k, x.ndim)
+
+
+def abfp_quantize(x: jnp.ndarray, fmt: Format, axis: int = -1, n: int = 64,
+                  dtype=jnp.int8, scale_dtype=jnp.bfloat16):
+    """Real ABFP quantization: returns (codes grouped, scales).
+
+    ``codes`` has shape x.shape with axis -> (G, n) moved last;
+    ``scales`` has the matching (..., G) shape.  Used by the native-int8
+    compute path (beyond-paper; see core.simulate).
+    """
+    from repro.core.quantize import quantize
+
+    xg, pad, k = _to_groups(x, axis, n)
+    alpha = abfp_scales(x, axis, n, scale_dtype)
+    codes, scale = quantize(xg, alpha[..., None], fmt, dtype=dtype)
+    return codes, scale[..., 0], (pad, k)

@@ -1,0 +1,181 @@
+"""Static calibration (paper §II-B1).
+
+The paper uses per-channel max calibration for weights and MSE calibration
+for activations (TensorRT-style), plus "static max" where the max over a
+calibration subset is reused at inference.
+
+Calibration is a host-side pass: run sample batches through the model with
+an observer that accumulates per-tensor / per-channel statistics, then solve
+for the clip range alpha.  The resulting ``QuantState`` pytree of scales is
+threaded through model apply (see repro.core.simulate / repro.nn.linear).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import Format
+from repro.core.quantize import qdq
+
+
+# ---------------------------------------------------------------------------
+# Observers: running statistics over calibration batches.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RunningStats:
+    """Accumulates |x| max / moments; channel axis optional (last dim)."""
+
+    absmax: np.ndarray | float = 0.0
+    ch_absmax: np.ndarray | None = None
+    ch_min: np.ndarray | None = None
+    ch_max: np.ndarray | None = None
+    count: int = 0
+    samples: list = dataclasses.field(default_factory=list)
+    max_samples: int = 8
+    collect_outer: bool = False  # accumulate X^T X for GPTQ Hessians
+    outer: np.ndarray | None = None
+
+    def update(self, x) -> None:
+        x = np.asarray(x, dtype=np.float32)
+        flat = x.reshape(-1, x.shape[-1])
+        if self.collect_outer:
+            o = flat.T.astype(np.float64) @ flat.astype(np.float64)
+            self.outer = o if self.outer is None else self.outer + o
+        self.absmax = max(float(np.abs(flat).max()), float(self.absmax))
+        cmax = np.abs(flat).max(axis=0)
+        cmin_v = flat.min(axis=0)
+        cmax_v = flat.max(axis=0)
+        if self.ch_absmax is None:
+            self.ch_absmax, self.ch_min, self.ch_max = cmax, cmin_v, cmax_v
+        else:
+            self.ch_absmax = np.maximum(self.ch_absmax, cmax)
+            self.ch_min = np.minimum(self.ch_min, cmin_v)
+            self.ch_max = np.maximum(self.ch_max, cmax_v)
+        self.count += flat.shape[0]
+        if len(self.samples) < self.max_samples:
+            # Keep a bounded reservoir of rows for MSE search.
+            take = min(4096, flat.shape[0])
+            idx = np.random.RandomState(self.count).choice(
+                flat.shape[0], size=take, replace=False
+            )
+            self.samples.append(flat[idx])
+
+
+# ---------------------------------------------------------------------------
+# Solvers: statistics -> clip range alpha.
+# ---------------------------------------------------------------------------
+def max_alpha(stats: RunningStats, per_channel: bool = False):
+    if per_channel:
+        return jnp.asarray(np.maximum(stats.ch_absmax, 1e-8))
+    return jnp.asarray(max(stats.absmax, 1e-8), dtype=jnp.float32)
+
+
+def mse_alpha(
+    stats: RunningStats,
+    fmt: Format,
+    num_candidates: int = 100,
+    per_channel: bool = False,
+) -> jnp.ndarray:
+    """Grid-search alpha minimizing E||QDQ(x; a) - x||^2 (paper §II-B1).
+
+    Candidates sweep (i/num) * absmax for i in 1..num, following the
+    TensorRT-style linear search the paper builds on.
+    """
+    x = jnp.asarray(np.concatenate(stats.samples, axis=0))  # (rows, C)
+    amax = max_alpha(stats, per_channel=per_channel)
+    fracs = jnp.linspace(1.0 / num_candidates, 1.0, num_candidates)
+
+    def err_for(frac):
+        a = amax * frac
+        err = (qdq(x, a, fmt) - x) ** 2
+        return err.mean(axis=0) if per_channel else err.mean()
+
+    errs = jax.lax.map(err_for, fracs)  # (num,) or (num, C)
+    best = jnp.argmin(errs, axis=0)
+    return amax * fracs[best]
+
+
+def mse_alpha_tensor(
+    x: jnp.ndarray, fmt: Format, num_candidates: int = 100
+) -> jnp.ndarray:
+    """One-shot per-tensor MSE alpha for an in-memory tensor (weights)."""
+    amax = jnp.maximum(jnp.abs(x).max(), 1e-8)
+    fracs = jnp.linspace(1.0 / num_candidates, 1.0, num_candidates)
+
+    def err_for(frac):
+        return ((qdq(x, amax * frac, fmt) - x) ** 2).mean()
+
+    errs = jax.lax.map(err_for, fracs)
+    return amax * fracs[jnp.argmin(errs)]
+
+
+# ---------------------------------------------------------------------------
+# Whole-model calibration driver.
+# ---------------------------------------------------------------------------
+class Calibrator:
+    """Collects activation stats at every quantized matmul site.
+
+    Usage:
+        calib = Calibrator()
+        with calib.observing():
+            model.apply(params, batch)   # simulate.qmatmul taps in
+        qstate = calib.solve(fmt, method='mse')
+    """
+
+    _ACTIVE: list["Calibrator"] = []
+
+    def __init__(self, collect_outer: bool = False) -> None:
+        self.stats: dict[str, RunningStats] = {}
+        self.collect_outer = collect_outer
+
+    # --- observation hooks -------------------------------------------------
+    def observe(self, site: str, x: jnp.ndarray) -> None:
+        st = self.stats.setdefault(
+            site, RunningStats(collect_outer=self.collect_outer)
+        )
+        st.update(jax.device_get(x))
+
+    def observing(self):
+        calib = self
+
+        class _Ctx:
+            def __enter__(self):
+                Calibrator._ACTIVE.append(calib)
+                return calib
+
+            def __exit__(self, *exc):
+                Calibrator._ACTIVE.remove(calib)
+                return False
+
+        return _Ctx()
+
+    @classmethod
+    def active(cls) -> "Calibrator | None":
+        return cls._ACTIVE[-1] if cls._ACTIVE else None
+
+    # --- solving ------------------------------------------------------------
+    def solve(
+        self,
+        fmt: Format,
+        method: str = "mse",
+        per_channel: bool = False,
+        num_candidates: int = 100,
+    ) -> dict[str, jnp.ndarray]:
+        """Returns {site: alpha} — the QuantState for static activation quant."""
+        out = {}
+        for site, st in self.stats.items():
+            if method == "max":
+                out[site] = max_alpha(st, per_channel=per_channel)
+            elif method == "mse":
+                out[site] = mse_alpha(
+                    st, fmt, num_candidates=num_candidates,
+                    per_channel=per_channel,
+                )
+            else:
+                raise ValueError(f"unknown calibration method {method!r}")
+        return out

@@ -1,0 +1,115 @@
+"""GPTQ (paper §II-B4): approximate second-order weight quantization.
+
+Reimplementation of the IST-DASLab algorithm in numpy (a host-side,
+run-once transform, like the original): iterate input channels in blocks,
+quantize each row of the (K_in, N_out) kernel against per-output-channel
+(optionally per-group) scales, and propagate the weighted error to the
+remaining channels through the inverse Hessian Cholesky factor.
+
+H = sum_b X_b X_b^T over calibration activations (the constant 2 cancels).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.formats import Format, IntFormat
+
+
+@dataclasses.dataclass
+class GPTQConfig:
+    percdamp: float = 0.01
+    blocksize: int = 128
+    group_size: int = -1  # -1: one scale per output channel over all K
+    actorder: bool = False
+
+
+def _quant_col(row: np.ndarray, alpha: np.ndarray, fmt: Format) -> np.ndarray:
+    """QDQ one input-channel row (N,) against per-channel alphas (N,)."""
+    scale = np.maximum(alpha, 1e-8) / fmt.qmax_pos
+    if isinstance(fmt, IntFormat):
+        q = np.clip(np.rint(row / scale), fmt.qmin, fmt.qmax_pos)
+        return q * scale
+    # float formats: reuse the jnp unit qdq via numpy round-trip
+    import jax.numpy as jnp
+
+    return np.asarray(fmt.qdq_unit(jnp.asarray(row / scale))) * scale
+
+
+def gptq_quantize(
+    w: np.ndarray,
+    hessian: np.ndarray,
+    fmt: Format,
+    cfg: GPTQConfig = GPTQConfig(),
+) -> tuple[np.ndarray, dict]:
+    """Quantize kernel ``w (K, N)`` given Hessian ``H (K, K)``.
+
+    Returns (w_qdq, info).  ``w_qdq`` replaces the kernel; the caller should
+    then run with a policy that does NOT re-quantize weights (w4a16-style) or
+    accepts the idempotent re-quantization error.
+    """
+    w = np.array(w, dtype=np.float64)
+    K, N = w.shape
+    H = np.array(hessian, dtype=np.float64)
+    assert H.shape == (K, K)
+
+    dead = np.diag(H) == 0
+    H[dead, dead] = 1.0
+    w[dead, :] = 0.0
+
+    perm = None
+    if cfg.actorder:
+        perm = np.argsort(-np.diag(H))
+        w = w[perm, :]
+        H = H[perm][:, perm]
+
+    damp = cfg.percdamp * np.mean(np.diag(H))
+    H[np.diag_indices(K)] += damp
+
+    # Inverse Hessian upper-Cholesky (as in the reference implementation).
+    Hinv = np.linalg.inv(H)
+    # Symmetrize for numerical safety before Cholesky.
+    Hinv = (Hinv + Hinv.T) / 2.0
+    U = np.linalg.cholesky(Hinv + 1e-12 * np.eye(K)).T  # upper triangular
+
+    group = cfg.group_size if cfg.group_size > 0 else K
+    losses = np.zeros_like(w)
+    alpha = None
+    for i1 in range(0, K, cfg.blocksize):
+        i2 = min(i1 + cfg.blocksize, K)
+        W1 = w[i1:i2, :].copy()
+        Q1 = np.zeros_like(W1)
+        E1 = np.zeros_like(W1)
+        U1 = U[i1:i2, i1:i2]
+        for i in range(i2 - i1):
+            k = i1 + i
+            if k % group == 0:
+                # refresh per-output-channel scales over the next group rows
+                g2 = min(k + group, K)
+                alpha = np.maximum(np.abs(w[k:g2, :]).max(axis=0), 1e-8)
+            d = U1[i, i]
+            q = _quant_col(W1[i, :], alpha, fmt)
+            Q1[i, :] = q
+            err = (W1[i, :] - q) / d
+            losses[k, :] = err**2 / 2.0
+            if i + 1 < i2 - i1:
+                W1[i + 1 :, :] -= np.outer(U1[i, i + 1 :], err)
+            E1[i, :] = err
+        w[i1:i2, :] = Q1
+        if i2 < K:
+            w[i2:, :] -= U[i1:i2, i2:].T @ E1
+
+    if perm is not None:
+        inv = np.argsort(perm)
+        w = w[inv, :]
+
+    info = {"loss": float(losses.sum()), "dead": int(dead.sum())}
+    return w.astype(np.float32), info
+
+
+def hessian_from_samples(samples: np.ndarray) -> np.ndarray:
+    """H = X^T X for rows-of-activations ``samples (rows, K)``."""
+    x = np.asarray(samples, dtype=np.float64)
+    return x.T @ x

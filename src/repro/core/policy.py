@@ -1,0 +1,171 @@
+"""Quantization policy: which tensors get which format/scaler (paper Fig 2).
+
+``TensorQuant`` configures one tensor role (input / weight / output) of a
+matmul site; ``QuantPolicy`` bundles the three roles plus execution options.
+Policies are frozen/hashable so they can close over jitted step functions.
+
+Presets mirror the paper's experimental grid:
+  w4a4_abfp, w4a8_abfp        — Tables I-IV, VII, VIII, X
+  w4a4_e2m1, w4a4_e1m2        — Table II (FP4 weights+activations)
+  w4_ae4m3_abfp               — Table V/VI (INT4 weights, FP8-E4M3 acts)
+  w4a4_mse, w4a8_mse          — static MSE calibration rows
+  *_qat                       — ABFP forward + PWL-STE backward (eqn (5))
+  w4a16                       — weight-only (GPTQ baseline config)
+  w8a8_int8_native            — beyond-paper: real int8 MXU compute
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.formats import Format, get_format
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorQuant:
+    """Quantizer spec for one tensor role at a matmul site.
+
+    scaler:
+      'abfp'         — dynamic per-vector max over groups of ``group`` along
+                       the contraction dim (paper eqn (4)); scales BF16.
+      'dynamic_max'  — dynamic per-tensor max.
+      'channel_max'  — per-output-channel max (paper's weight calibration).
+      'static'       — calibrated alpha from the QuantState (max or MSE).
+    """
+
+    fmt_name: str
+    scaler: str = "abfp"
+    group: int = 64
+    ste: bool = False
+    scale_dtype: str = "bfloat16"
+
+    @property
+    def fmt(self) -> Format:
+        return get_format(self.fmt_name)
+
+    def replace(self, **kw) -> "TensorQuant":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Full policy for the simulator's matmul chokepoint.
+
+    compute:
+      'fp'    — paper-faithful: QDQ then high-precision matmul (eqns 6-9).
+      'int8'  — beyond-paper native path: int8 codes contracted on the MXU
+                with per-group rescale (only valid for int formats + abfp).
+    fused:
+      route through the Pallas fused kernel (TPU target; interpret on CPU).
+    """
+
+    name: str = "fp32"
+    input: TensorQuant | None = None
+    weight: TensorQuant | None = None
+    output: TensorQuant | None = None
+    attn_bmm: bool = False  # also quantize q/k and probs/v inputs
+    compute: str = "fp"
+    fused: bool = False
+    # KV-cache handling at decode (serving §Perf):
+    #   'requant'  — paper-faithful: re-QDQ the whole cache every step.
+    #   'on_write' — quantize each entry once when written (exact for K's
+    #                head_dim groups; per-token for V — documented
+    #                deviation), skip re-QDQ at read: kills the per-step
+    #                full-cache QDQ chain.
+    #   'int8'     — on_write semantics + REAL int8 cache storage (codes +
+    #                per-(slot, head) f32 scales): halves cache capacity
+    #                and read traffic.  TransformerLM family.
+    kv_cache: str = "requant"
+
+    @property
+    def enabled(self) -> bool:
+        return any(x is not None for x in (self.input, self.weight, self.output))
+
+    def replace(self, **kw) -> "QuantPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def with_ste(self, ste: bool = True) -> "QuantPolicy":
+        """QAT variant: same formats, PWL-STE gradients."""
+        rep = {}
+        for role in ("input", "weight", "output"):
+            tq = getattr(self, role)
+            if tq is not None:
+                rep[role] = tq.replace(ste=ste)
+        return self.replace(name=self.name + "_qat", **rep)
+
+
+NONE = QuantPolicy()
+
+
+def _abfp(fmt: str, n: int, ste: bool = False) -> TensorQuant:
+    return TensorQuant(fmt_name=fmt, scaler="abfp", group=n, ste=ste)
+
+
+def preset(name: str, n: int = 64) -> QuantPolicy:
+    """Look up a named policy from the paper's grid."""
+    key = name.lower()
+    if key in ("fp32", "none", "off", "baseline"):
+        return NONE
+    table: dict[str, QuantPolicy] = {
+        # --- ABFP family (Tables I-IV, VIII, X) ---
+        "w4a4_abfp": QuantPolicy(
+            name=key, input=_abfp("int4", n), weight=_abfp("int4", n),
+            attn_bmm=True,
+        ),
+        "w4a8_abfp": QuantPolicy(
+            name=key, input=_abfp("int8", n), weight=_abfp("int4", n),
+            attn_bmm=True,
+        ),
+        # --- FP4 weights + activations (Table II) ---
+        "w4a4_e2m1": QuantPolicy(
+            name=key, input=_abfp("e2m1", n), weight=_abfp("e2m1", n),
+            attn_bmm=True,
+        ),
+        "w4a4_e1m2": QuantPolicy(
+            name=key, input=_abfp("e1m2", n), weight=_abfp("e1m2", n),
+            attn_bmm=True,
+        ),
+        # --- INT4 weights + FP8 activations (Tables V, VI) ---
+        "w4_ae4m3_abfp": QuantPolicy(
+            name=key, input=_abfp("e4m3", n), weight=_abfp("int4", n),
+            attn_bmm=True,
+        ),
+        # --- static calibration (Tables I, IV): per-channel max weights,
+        #     static MSE activations ---
+        "w4a4_mse": QuantPolicy(
+            name=key,
+            input=TensorQuant("int4", scaler="static"),
+            weight=TensorQuant("int4", scaler="channel_max"),
+            attn_bmm=True,
+        ),
+        "w4a8_mse": QuantPolicy(
+            name=key,
+            input=TensorQuant("int8", scaler="static"),
+            weight=TensorQuant("int4", scaler="channel_max"),
+            attn_bmm=True,
+        ),
+        # --- weight-only (GPTQ baseline shape, Table V "W4A16") ---
+        "w4a16": QuantPolicy(
+            name=key, input=None, weight=_abfp("int4", n), attn_bmm=False,
+        ),
+        # --- beyond-paper: native int8 compute ---
+        "w8a8_int8_native": QuantPolicy(
+            name=key, input=_abfp("int8", n), weight=_abfp("int8", n),
+            attn_bmm=False, compute="int8",
+        ),
+        "w4a8_int8_native": QuantPolicy(
+            name=key, input=_abfp("int8", n), weight=_abfp("int4", n),
+            attn_bmm=False, compute="int8",
+        ),
+    }
+    if key.endswith("_qat"):
+        base = table.get(key[: -len("_qat")])
+        if base is not None:
+            return base.with_ste(True)
+    try:
+        return table[key]
+    except KeyError as e:
+        raise ValueError(
+            f"unknown policy preset {name!r}; known: {sorted(table)} "
+            "(+ '_qat' suffixes, 'fp32')"
+        ) from e

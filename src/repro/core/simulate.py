@@ -1,0 +1,170 @@
+"""The simulator chokepoint: quantized matmul (paper eqns (6)-(9), Fig 2).
+
+Every matmul-bearing layer in ``repro.nn`` routes through ``qmatmul`` (linear
+layers) or ``qdq_activation`` (attention BMM operands).  This is the JAX
+equivalent of INT-FP-QSim's layer replacement: instead of swapping torch
+modules, the policy flows down the call tree and this module applies the
+quantizer functions f_q^w, f_q^x, f_q^y around the contraction.
+
+Paths:
+  * compute='fp'   : QDQ both operands, contract in high precision
+                     (paper-faithful; the paper uses fp32, we default to fp32
+                     on CPU and bf16-with-fp32-accum for the TPU dry-run).
+  * compute='int8' : beyond-paper — contract int8 codes with int32
+                     accumulation and per-group BF16 rescale (native MXU).
+  * fused=True     : route through the Pallas fused kernel (repro.kernels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import abfp as abfp_mod
+from repro.core.calibration import Calibrator
+from repro.core.policy import QuantPolicy, TensorQuant
+from repro.core.quantize import maybe_ste
+
+
+def _dynamic_max_alpha(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+
+
+def qdq_activation(
+    x: jnp.ndarray,
+    tq: TensorQuant | None,
+    *,
+    axis: int = -1,
+    site: str = "",
+    alpha=None,
+) -> jnp.ndarray:
+    """Apply an activation quantizer along the contraction ``axis``.
+
+    ``alpha`` supplies the calibrated scale when ``tq.scaler == 'static'``
+    (threaded from the QuantState by the owning layer).
+    """
+    if tq is None:
+        return x
+    calib = Calibrator.active()
+    if calib is not None and site:
+        calib.observe(site, x)
+    if tq.scaler == "abfp":
+        return abfp_mod.abfp_qdq(
+            x, tq.fmt, axis=axis, n=tq.group, ste=tq.ste,
+            scale_dtype=jnp.dtype(tq.scale_dtype),
+        )
+    if tq.scaler == "dynamic_max":
+        return maybe_ste(x, _dynamic_max_alpha(x), tq.fmt, tq.ste)
+    if tq.scaler == "static":
+        if alpha is None:
+            # Uncalibrated: fall back to dynamic max (calibration pass mode).
+            alpha = _dynamic_max_alpha(x)
+        return maybe_ste(x, jnp.asarray(alpha, jnp.float32), tq.fmt, tq.ste)
+    raise ValueError(f"bad activation scaler {tq.scaler!r}")
+
+
+def qdq_weight(
+    w: jnp.ndarray, tq: TensorQuant | None, *, contract_axis: int = 0
+) -> jnp.ndarray:
+    """Apply the weight quantizer. ``w`` is (K, N); groups run along K."""
+    if tq is None:
+        return w
+    if tq.scaler == "abfp":
+        return abfp_mod.abfp_qdq(
+            w, tq.fmt, axis=contract_axis, n=tq.group, ste=tq.ste,
+            scale_dtype=jnp.dtype(tq.scale_dtype),
+        )
+    if tq.scaler == "channel_max":
+        # Per-output-channel max over the contraction dim (paper weights).
+        alpha = jnp.maximum(
+            jnp.max(jnp.abs(w), axis=contract_axis, keepdims=True), 1e-8
+        )
+        return maybe_ste(w, alpha, tq.fmt, tq.ste)
+    if tq.scaler == "dynamic_max":
+        return maybe_ste(w, _dynamic_max_alpha(w), tq.fmt, tq.ste)
+    raise ValueError(f"bad weight scaler {tq.scaler!r}")
+
+
+def _fp_matmul(x: jnp.ndarray, w: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return jax.lax.dot_general(
+        x.astype(compute_dtype),
+        w.astype(compute_dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _int8_group_matmul(x, w, tq_in: TensorQuant, tq_w: TensorQuant):
+    """Native path: per-group int8 contraction with int32 accumulation.
+
+    y[..., nout] = sum_g s_x[..., g] * s_w[g, nout] * (xc_g . wc_g)
+    """
+    n = tq_in.group
+    xc, xs, _ = abfp_mod.abfp_quantize(x, tq_in.fmt, axis=-1, n=n)
+    wc, ws, _ = abfp_mod.abfp_quantize(w, tq_w.fmt, axis=0, n=n)
+    # xc: (..., G, n) int8 ; wc: (N, G, n) int8 (axis 0 moved last by grouping)
+    # partial[..., g, nout] — contract the n dim per group, int32 accum.
+    partial = jnp.einsum(
+        "...gk,ngk->...gn", xc, wc, preferred_element_type=jnp.int32
+    )
+    y = jnp.einsum(
+        "...gn,...g,ng->...n",
+        partial.astype(jnp.float32),
+        xs.astype(jnp.float32),
+        ws.astype(jnp.float32),
+    )
+    return y
+
+
+def qmatmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    policy: QuantPolicy,
+    *,
+    site: str = "",
+    in_alpha=None,
+    out_alpha=None,
+    compute_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Quantized-simulated ``x @ w`` with ``x: (..., K)`` and ``w: (K, N)``.
+
+    Layers with multi-dim contractions flatten to this canonical form first
+    (see nn.linear.DenseGeneral) so the kernels and the int8 path stay simple.
+    """
+    if type(w).__name__ == "CompressedKernel":
+        # int8-stored serving weights (models/serving_transforms): lazily
+        # reconstituted here — the one chokepoint every layer routes through.
+        from repro.models.serving_transforms import decompress_kernel
+
+        w = decompress_kernel(w, dtype=compute_dtype)
+    if not policy.enabled:
+        return _fp_matmul(x, w, compute_dtype)
+
+    if policy.fused:
+        from repro.kernels import ops as kops  # lazy: pallas import
+
+        return kops.abfp_matmul_fused(
+            x, w, policy, interpret=kops.should_interpret()
+        )
+
+    if (
+        policy.compute == "int8"
+        and policy.input is not None
+        and policy.weight is not None
+        and policy.input.scaler == "abfp"
+        and policy.weight.scaler == "abfp"
+        and policy.input.group == policy.weight.group
+    ):
+        y = _int8_group_matmul(x, w, policy.input, policy.weight)
+    else:
+        xq = qdq_activation(
+            x, policy.input, axis=-1, site=site + "/in", alpha=in_alpha
+        )
+        wq = qdq_weight(w, policy.weight, contract_axis=0)
+        y = _fp_matmul(xq, wq, compute_dtype)
+
+    if policy.output is not None:
+        y = qdq_activation(
+            y, policy.output, axis=-1, site=site + "/out", alpha=out_alpha
+        )
+    return y

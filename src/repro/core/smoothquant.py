@@ -1,0 +1,46 @@
+"""SmoothQuant (paper §II-B3): migrate quantization difficulty acts->weights.
+
+Per-channel smoothing factors  s_j = a_j^alpha / w_j^(1-alpha)  with
+alpha = 0.5 (the paper fixes 0.5 for all layers).  Activations are divided by
+``s`` and weights multiplied, a mathematical identity pre-quantization that
+tames activation outliers.
+
+Folding: where the preceding op is a (RMS/Layer)Norm with a scale parameter,
+``1/s`` folds into the norm scale for free; otherwise the layer keeps an
+explicit ``smooth`` vector applied to its input (the torch implementation
+does the same).  Both paths are supported by nn.linear.DenseGeneral via the
+``smooth`` param entry; the model-level driver lives in
+``repro.models.quant_transforms``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def smoothing_factors(
+    act_absmax: np.ndarray, weight_absmax: np.ndarray, alpha: float = 0.5
+) -> np.ndarray:
+    """s_j = max|X_j|^alpha / max|W_j|^(1-alpha), clipped away from 0."""
+    a = np.maximum(np.asarray(act_absmax, np.float32), 1e-5)
+    w = np.maximum(np.asarray(weight_absmax, np.float32), 1e-5)
+    s = a**alpha / w ** (1.0 - alpha)
+    # Guard degenerate channels (dead activations): keep scale at 1.
+    s = np.where(~np.isfinite(s) | (s < 1e-5), 1.0, s)
+    return s.astype(np.float32)
+
+
+def smooth_linear(w: jnp.ndarray, act_absmax, alpha: float = 0.5):
+    """Compute (s, w*s) for a (K, N) kernel given input-channel absmax (K,)."""
+    w_absmax = np.abs(np.asarray(w)).max(axis=tuple(range(1, np.ndim(w))))
+    s = smoothing_factors(act_absmax, w_absmax, alpha)
+    w_new = jnp.asarray(w) * jnp.asarray(s).reshape(
+        (-1,) + (1,) * (jnp.ndim(w) - 1)
+    )
+    return jnp.asarray(s), w_new
+
+
+def fold_into_norm(norm_scale: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Fold 1/s into a preceding norm's scale parameter."""
+    return norm_scale / s.astype(norm_scale.dtype)

@@ -1,0 +1,13 @@
+"""Data pipeline: tokenizer, corpora, deterministic sharded loader."""
+
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.corpus import synthetic_corpus, text_corpus
+from repro.data.loader import LMLoader, LoaderState
+
+__all__ = [
+    "ByteTokenizer",
+    "synthetic_corpus",
+    "text_corpus",
+    "LMLoader",
+    "LoaderState",
+]

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the INT-FP-QSim hot spots (validated in
+interpret mode on CPU against ref.py oracles)."""

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused ABFP quantize-dequantize (paper eqn (4) + (2,3)).
+
+The paper's simulator applies QDQ as separate tensor ops around each matmul
+— on TPU that is 3 extra HBM round-trips per operand.  This kernel fuses the
+per-vector (n=64/128) max, quantize and dequantize into one VMEM-resident
+pass: each (BM, BK) tile is loaded once, grouped along K, scaled against its
+BF16 group max, rounded/clipped in-register, rescaled and written once.
+
+Block shapes are MXU/VPU aligned: BK a multiple of the group length n (so
+groups never straddle tiles) and lanes of 128; BM a multiple of 8 (f32
+sublane) — see the taxonomy's quantized-kernel guidance (B.12).
+
+Target is TPU (pl.pallas_call + BlockSpec); on CPU we run interpret=True.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import Format, IntFormat
+
+
+def _qdq_tile(xg: jnp.ndarray, fmt: Format, scale_dtype) -> jnp.ndarray:
+    """QDQ a (BM, G, n) group-tiled f32 block against per-group max."""
+    alpha = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    # bf16 scales, round-to-nearest (matches core/abfp + ref oracles)
+    a16 = alpha.astype(scale_dtype)
+    alpha = jnp.maximum(a16.astype(jnp.float32), 1e-12)
+    scale = alpha / fmt.qmax_pos
+    if isinstance(fmt, IntFormat):
+        q = jnp.clip(jnp.round(xg / scale), fmt.qmin, fmt.qmax_pos)
+        return q * scale
+    return fmt.qdq_unit(xg / scale) * scale
+
+
+def _kernel(x_ref, o_ref, *, n: int, fmt: Format, scale_dtype):
+    x = x_ref[...].astype(jnp.float32)
+    bm, bk = x.shape
+    xg = x.reshape(bm, bk // n, n)
+    y = _qdq_tile(xg, fmt, scale_dtype)
+    o_ref[...] = y.reshape(bm, bk).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "n", "block_m", "block_k", "interpret"),
+)
+def abfp_qdq(
+    x: jnp.ndarray,
+    fmt: Format,
+    n: int = 64,
+    block_m: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused ABFP QDQ along the last dim of a 2-D array (M, K)."""
+    M, K = x.shape
+    assert K % n == 0, (K, n)
+    bk = min(block_k, K)
+    bk -= bk % n
+    bm = min(block_m, M)
+    assert K % bk == 0 and M % bm == 0, (M, K, bm, bk)
+    grid = (M // bm, K // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, fmt=fmt, scale_dtype=jnp.bfloat16),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, K), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,84 @@
+"""Jit'd wrappers over the Pallas kernels with CPU interpret fallback.
+
+``should_interpret()`` — True when no TPU is present, so tests and the
+policy.fused path run the kernel bodies through the Pallas interpreter
+(bit-accurate, slow) on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.kernels import abfp_qdq as _qdq_mod
+from repro.kernels import quant_matmul as _mm_mod
+
+
+@functools.lru_cache(maxsize=1)
+def should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def abfp_qdq(x, fmt, n: int = 64, interpret: bool | None = None):
+    """Fused QDQ over the last dim; leading dims are flattened to rows."""
+    interpret = should_interpret() if interpret is None else interpret
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    m = x2.shape[0]
+    bm = 256
+    while m % bm and bm > 1:
+        bm //= 2
+    y = _qdq_mod.abfp_qdq(x2, fmt, n=n, block_m=bm, interpret=interpret)
+    return y.reshape(shape)
+
+
+def flash_attention_gqa(qh, kh, vh, scale: float | None = None,
+                        causal: bool = True, block_q: int = 128,
+                        block_k: int = 128,
+                        interpret: bool | None = None):
+    """(B, S, H, D) GQA front-end for the fused flash kernel.
+
+    KV heads are broadcast to the query-head count and heads fold into the
+    batch dim; no softcap/window support (callers keep the jnp paths for
+    those variants).
+    """
+    from repro.kernels.flash_attention import flash_attention
+
+    interpret = should_interpret() if interpret is None else interpret
+    B, S, H, D = qh.shape
+    T, KV = kh.shape[1], kh.shape[2]
+    G = H // KV
+    q = qh.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    k = jnp.repeat(kh.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, T, D)
+    v = jnp.repeat(vh.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, T, D)
+    o = flash_attention(q, k, v, scale=scale, causal=causal,
+                        block_q=block_q, block_k=block_k,
+                        interpret=interpret)
+    return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def abfp_matmul_fused(x, w, policy: QuantPolicy,
+                      interpret: bool | None = None):
+    """Dispatch the fused kernel for a (…, K) x (K, N) quantized matmul."""
+    interpret = should_interpret() if interpret is None else interpret
+    tq_x, tq_w = policy.input, policy.weight
+    assert tq_x is not None and tq_w is not None, "fused path needs x+w quant"
+    n = tq_x.group
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    m = x2.shape[0]
+    bm = 256
+    while m % bm and bm > 1:
+        bm //= 2
+    bn = 256
+    while w.shape[1] % bn and bn > 1:
+        bn //= 2
+    kw = dict(n=n, block_m=bm, block_n=bn, interpret=interpret)
+    if policy.compute == "int8":
+        y = _mm_mod.abfp_matmul_int8(x2, w, tq_x.fmt, tq_w.fmt, **kw)
+    else:
+        y = _mm_mod.abfp_matmul(x2, w, tq_x.fmt, tq_w.fmt, **kw)
+    return y.reshape(*shape[:-1], w.shape[1])

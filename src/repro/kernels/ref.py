@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests).
+
+These intentionally re-derive the math independently of core/abfp.py's
+helpers where practical, so kernel bugs and library bugs can't cancel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import Format, IntFormat
+
+
+def _group_scales(x: jnp.ndarray, axis: int, n: int,
+                  scale_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Per-group max(|x|) scales along ``axis`` with bf16 round-up."""
+    xm = jnp.moveaxis(x, axis, -1)
+    g = xm.shape[-1] // n
+    xg = xm.reshape(*xm.shape[:-1], g, n)
+    alpha = jnp.max(jnp.abs(xg), axis=-1)
+    a16 = alpha.astype(scale_dtype)
+    return jnp.maximum(a16.astype(jnp.float32), 1e-12)
+
+
+def abfp_qdq_ref(x: jnp.ndarray, fmt: Format, n: int = 64,
+                 axis: int = -1) -> jnp.ndarray:
+    """Reference ABFP quantize-dequantize along ``axis``."""
+    axis = axis % x.ndim
+    xm = jnp.moveaxis(x, axis, -1)
+    g = xm.shape[-1] // n
+    assert xm.shape[-1] % n == 0
+    xg = xm.reshape(*xm.shape[:-1], g, n).astype(jnp.float32)
+    alpha = _group_scales(x, axis, n)[..., None]
+    scale = alpha / fmt.qmax_pos
+    yg = fmt.qdq_unit(xg / scale) * scale
+    ym = yg.reshape(xm.shape)
+    return jnp.moveaxis(ym, -1, axis).astype(x.dtype)
+
+
+def abfp_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, fmt_x: Format,
+                    fmt_w: Format, n: int = 64) -> jnp.ndarray:
+    """Reference fused ABFP matmul: QDQ both operands along K, fp32 dot."""
+    xq = abfp_qdq_ref(x, fmt_x, n, axis=-1)
+    wq = abfp_qdq_ref(w, fmt_w, n, axis=0)
+    return jnp.dot(xq.astype(jnp.float32), wq.astype(jnp.float32))
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        scale: float | None = None,
+                        causal: bool = True) -> jnp.ndarray:
+    """Reference attention: materialized softmax(QK^T·scale)V, causal."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    scale = D**-0.5 if scale is None else scale
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def int8_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, fmt_x: Format,
+                    fmt_w: Format, n: int = 64) -> jnp.ndarray:
+    """Reference native-int path: per-group int codes, int32 accum,
+    per-group rescale."""
+    assert isinstance(fmt_x, IntFormat) and isinstance(fmt_w, IntFormat)
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and K % n == 0
+    g = K // n
+    sx = _group_scales(x, -1, n) / fmt_x.qmax_pos  # (M, g)
+    sw = _group_scales(w, 0, n) / fmt_w.qmax_pos  # (N, g)
+    xg = x.astype(jnp.float32).reshape(M, g, n)
+    wg = jnp.moveaxis(w.astype(jnp.float32), 0, -1).reshape(N, g, n)
+    xc = jnp.clip(jnp.round(xg / sx[..., None]), fmt_x.qmin, fmt_x.qmax_pos)
+    wc = jnp.clip(jnp.round(wg / sw[..., None]), fmt_w.qmin, fmt_w.qmax_pos)
+    partial = jnp.einsum("mgk,ngk->mgn", xc, wc)  # int-valued f32
+    return jnp.einsum("mgn,mg,ng->mn", partial, sx, jnp.moveaxis(sw, 0, 0))

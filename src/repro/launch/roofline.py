@@ -1,0 +1,181 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Terms (per chip, seconds) — constants from launch.mesh (TPU v5e):
+    compute    = HLO_flops / PEAK_BF16_FLOPS
+    memory     = HLO_bytes_accessed / HBM_BW
+    collective = collective_link_bytes / ICI_BW
+
+``cost_analysis()`` on the compiled (SPMD-partitioned) executable reports
+*per-device* flops/bytes (verified empirically — see DESIGN.md §4 probe).
+
+Two accounting caveats handled here:
+  * scan-over-layers compiles to a while loop whose body XLA cost analysis
+    counts ONCE — the dry-run therefore also compiles small *unrolled*
+    variants (k and 2k layers) and extrapolates linearly (exact: cost is
+    affine in layer count).
+  * collective traffic is parsed from HLO text: per-op link bytes are
+    estimated from the result shape with ring factors
+    (all-reduce 2·P, all-gather P, reduce-scatter (N-1)·R ≈ P,
+    all-to-all R, collective-permute R), with N parsed from replica_groups.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+from repro.launch import mesh as hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*))\s+("
+    + "|".join(_COLLECTIVES) + r")(-start)?\("
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    bs = _DTYPE_BYTES.get(dtype)
+    if bs is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * bs
+
+
+def _group_size(line: str, default: int = 16) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def _link_bytes(kind: str, result_bytes: int, n: int) -> float:
+    """Ring-traffic bytes per chip for one collective."""
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / max(n, 1)
+    if kind == "all-gather":
+        return result_bytes * (n - 1) / max(n, 1)
+    if kind == "reduce-scatter":
+        return result_bytes * (n - 1)  # result is the scattered shard
+    if kind == "all-to-all":
+        return result_bytes * (n - 1) / max(n, 1)
+    return float(result_bytes)  # collective-permute
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind link-byte totals parsed from (SPMD) HLO text."""
+    bytes_by_kind: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        result_bytes = sum(
+            _shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group(1))
+        )
+        n = _group_size(line)
+        b = _link_bytes(kind, result_bytes, n)
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0.0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    return {
+        "bytes_by_kind": bytes_by_kind,
+        "counts": counts,
+        "total_bytes": sum(bytes_by_kind.values()),
+    }
+
+
+def cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca)
+
+
+def memory_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    return {k: int(getattr(ma, k, 0)) for k in keys}
+
+
+def extract_costs(compiled) -> dict:
+    cost = cost_dict(compiled)
+    colls = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": float(colls["total_bytes"]),
+        "collectives": colls,
+    }
+
+
+def extrapolate(cost_k: dict, cost_2k: dict, periods: int) -> dict:
+    """Affine layer-count extrapolation: total = f(k) + (P-1)·(f(2k)-f(k)).
+
+    ``periods`` = n_layers / k where k is the layer-pattern period.
+    """
+    out = {}
+    for key in ("flops", "bytes", "collective_bytes"):
+        per = cost_2k[key] - cost_k[key]
+        out[key] = cost_k[key] + max(periods - 1, 0) * per
+        out[key + "_fixed"] = cost_k[key] - per  # embed/head/optimizer part
+        out[key + "_per_period"] = per
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float) -> dict:
+    t_c = flops / hw.PEAK_BF16_FLOPS
+    t_m = bytes_accessed / hw.HBM_BW
+    t_x = coll_bytes / hw.ICI_BW
+    dominant = max(
+        (("compute", t_c), ("memory", t_m), ("collective", t_x)),
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(t_c, t_m, t_x)
+    return {
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_collective_s": t_x,
+        "dominant": dominant,
+        "roofline_bound_s": bound,
+        # fraction of the bound spent on useful compute
+        "compute_fraction_of_bound": (t_c / bound) if bound > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, shape, chips: int) -> float:
+    """Analytic 6·N·D (train) / 2·N·D (inference fwd), per chip."""
+    n = cfg.n_active_params() if cfg.family == "moe" else cfg.n_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / chips

@@ -1,0 +1,211 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x shape) cell.
+
+No device allocation anywhere: params come from jax.eval_shape over init,
+batches/caches are ShapeDtypeStructs, and shardings are derived from the
+logical-axes trees via repro.dist.sharding rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.dist import sharding as shd
+from repro.models.encdec import EncDecState
+from repro.models.hybrid import HybridState
+from repro.models.lm import DecodeState
+from repro.nn.attention import KVCache
+from repro.nn.ssm import SSMCache
+
+
+# ---------------------------------------------------------------------------
+# Per-shape logical-rule overrides (see DESIGN.md §4).
+# ---------------------------------------------------------------------------
+def rules_for(cfg: ArchConfig, shape: ShapeSpec,
+              strategy: str | None = None) -> dict:
+    rules: dict = dict(shd.DEFAULT_RULES)
+    rules["conv_dim"] = None
+    if strategy == "fsdp":
+        # Pure FSDP/ZeRO-3 (§Perf): batch over the WHOLE mesh, weights
+        # 1-D sharded over (data, model) on their feature dim, no tensor
+        # parallelism and no sequence-parallel resharding.  Activations
+        # stay batch-sharded only (the duplicate-axis filter strips
+        # data/model from activation feature dims since batch used them).
+        # GSPMD inserts per-layer weight all-gathers (fwd+bwd) + gradient
+        # reduce-scatters — O(params) traffic instead of O(activations).
+        rules.update({
+            "batch": ("pod", "data", "model"),
+            "seq_res": None,
+            "kv_seq": None,
+            "heads": None,
+            "qkv": ("data", "model"),
+            "mlp": ("data", "model"),
+            "vocab": ("data", "model"),
+            "experts": "model",  # MoE keeps expert sharding
+            "moe_mlp": None,
+            "ssm_inner": None,
+            "ssm_heads": None,
+        })
+    if shape.name == "long_500k":
+        # batch=1: nothing to shard there; spread the KV length over the
+        # whole mesh instead (GSPMD flash-decoding).
+        rules["batch"] = None
+        rules["kv_seq"] = ("pod", "data", "model")
+    if cfg.sharding_overrides:
+        for k, v in cfg.sharding_overrides.items():
+            if ":" in k:  # shape-scoped override, e.g. "train_4k:batch"
+                shp, ax = k.split(":", 1)
+                if shp == shape.name:
+                    rules[ax] = tuple(v) if isinstance(v, (list, tuple)) else v
+            else:
+                rules[k] = tuple(v) if isinstance(v, (list, tuple)) else v
+    return rules
+
+
+def fit_batch_rule(rules: dict, global_batch: int, mesh) -> dict:
+    """Auto-fallback: drop mesh axes the batch dim can't fill evenly.
+
+    jit *arguments* must divide exactly (GSPMD pads only intermediates), so
+    a 256-row batch cannot map onto 512 chips; the production behaviour is
+    to keep the largest prefix of the mapped axes that divides evenly (the
+    remaining axes replicate the batch — pure compute overprovisioning,
+    never an error)."""
+    phys = rules.get("batch")
+    if phys is None:
+        return rules
+    axes = (phys,) if isinstance(phys, str) else tuple(phys)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    kept, prod = [], 1
+    for a in axes:
+        if a not in sizes:
+            continue
+        if global_batch % (prod * sizes[a]) == 0:
+            kept.append(a)
+            prod *= sizes[a]
+    out = dict(rules)
+    out["batch"] = tuple(kept) if kept else None
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """(sds_tree, axes_tree) for the training/prefill batch dict."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, dt = jnp.int32, jnp.dtype(cfg.dtype)
+    sds, axes = {}, {}
+    tok_len = S
+    if cfg.family == "vlm":
+        tok_len = S - cfg.vision_patches
+        sds["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_patches, cfg.d_model), dt)
+        axes["patch_embeds"] = ("batch", None, "embed")
+    if cfg.family == "encdec":
+        sds["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        axes["frames"] = ("batch", None, "embed")
+    sds["tokens"] = jax.ShapeDtypeStruct((B, tok_len), i32)
+    axes["tokens"] = ("batch", None)
+    if shape.kind == "train":
+        sds["labels"] = jax.ShapeDtypeStruct((B, tok_len), i32)
+        axes["labels"] = ("batch", None)
+    return sds, axes
+
+
+def token_spec(cfg: ArchConfig, batch: int):
+    return jax.ShapeDtypeStruct((batch, 1), jnp.int32), ("batch", None)
+
+
+# ---------------------------------------------------------------------------
+# Decode-state axes (mirrors each family's state pytree)
+# ---------------------------------------------------------------------------
+def _kv_axes(quant: bool = False):
+    if quant:
+        return KVCache(
+            k=("layers", "batch", "kv_seq", "qkv"),
+            v=("layers", "batch", "kv_seq", "qkv"),
+            length=("layers",),
+            k_scale=("layers", "batch", "kv_seq", None),
+            v_scale=("layers", "batch", "kv_seq", None),
+        )
+    return KVCache(
+        k=("layers", "batch", "kv_seq", "qkv"),
+        v=("layers", "batch", "kv_seq", "qkv"),
+        length=("layers",),
+    )
+
+
+def _ssm_axes(extra=("layers",)):
+    return SSMCache(
+        conv=extra + ("batch", None, "ssm_inner"),
+        state=extra + ("batch", "ssm_heads", None, None),
+    )
+
+
+def decode_state_axes(cfg: ArchConfig, state) -> Any:
+    """Axes tree matching ``init_decode_state``'s structure."""
+    if isinstance(state, HybridState):
+        return HybridState(
+            kv=_kv_axes(),
+            ssm=_ssm_axes(extra=("layers", None)),
+            x0=("batch", None, "embed"),
+            position=(),
+        )
+    if isinstance(state, EncDecState):
+        return EncDecState(
+            kv=_kv_axes(),
+            cross_k=("layers", "batch", "kv_seq", "qkv"),
+            cross_v=("layers", "batch", "kv_seq", "qkv"),
+            enc_pos=("batch", "kv_seq"),
+            position=(),
+        )
+    assert isinstance(state, DecodeState)
+    kv_quant = state.kv is not None and state.kv.k_scale is not None
+    return DecodeState(
+        kv=_kv_axes(quant=kv_quant) if state.kv is not None else None,
+        ssm=_ssm_axes() if state.ssm is not None else None,
+        position=(),
+    )
+
+
+def eval_decode_state(model, cfg: ArchConfig, shape: ShapeSpec,
+                      kv_quant: bool = False):
+    """ShapeDtypeStruct tree of the decode state (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_len"] = S
+    if kv_quant:
+        kw["kv_quant"] = True
+    state = jax.eval_shape(
+        lambda: model.init_decode_state(B, S, **kw)
+    )
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly
+# ---------------------------------------------------------------------------
+def _is_axes(x) -> bool:
+    """An axes leaf is a plain tuple of axis names / None — NOT a NamedTuple
+    state container (KVCache etc. are tuples too)."""
+    return x is None or (
+        type(x) is tuple
+        and all(e is None or isinstance(e, str) for e in x)
+    )
+
+
+def shardings_from_axes(axes_tree, mesh, rules):
+    def one(axes):
+        if axes is None:
+            return NamedSharding(mesh, shd.spec_for((), rules=rules,
+                                                    mesh=mesh))
+        return NamedSharding(mesh,
+                             shd.spec_for(axes, rules=rules, mesh=mesh))
+
+    return jax.tree_util.tree_map(one, axes_tree, is_leaf=_is_axes)

@@ -1,0 +1,150 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+End-to-end driver used by examples/train_lm.py and the integration tests:
+builds the model from an arch config (optionally reduced), a deterministic
+sharded data pipeline, the quantization policy, the (optionally QAT) train
+step, and runs the fault-tolerant loop with checkpointing.
+
+On a real pod this process runs once per host (jax.distributed initializes
+from the cluster env); the CPU container runs it single-process.  The mesh
+comes from ``--mesh debug`` (1 device), ``--mesh pod`` (16x16) or
+``--mesh multipod`` (2x16x16) — the latter two only make sense under the
+dry-run's host-device flag and are used by the launch scripts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt-tiny")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the arch's reduced CPU-scale config")
+    ap.add_argument("--policy", default="fp32")
+    ap.add_argument("--qat", action="store_true",
+                    help="enable the PWL-STE backward (paper eqn (5))")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--weight-decay", type=float, default=0.01)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--corpus-tokens", type=int, default=200_000)
+    ap.add_argument("--corpus-path", default=None,
+                    help="text file to train on (default: synthetic)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--metrics", default=None)
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--abfp-n", type=int, default=64)
+    return ap
+
+
+def make_everything(args):
+    """(model, params, opt, opt_state, loader, train_step, eval_fn)."""
+    from repro.configs import get_config
+    from repro.core.policy import preset
+    from repro.data.corpus import synthetic_corpus, text_corpus
+    from repro.data.loader import LMLoader, eval_batches
+    from repro.models import build_model
+    from repro.nn.module import unbox
+    from repro.optim.adamw import AdamW
+    from repro.optim.schedule import warmup_cosine
+    from repro.train.step import TrainStepConfig, make_train_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(args.seed)))
+
+    policy = preset(args.policy, n=args.abfp_n)
+    if args.qat and policy.enabled:
+        policy = policy.with_ste(True)
+
+    if args.corpus_path:
+        stream = text_corpus(args.corpus_path)
+    else:
+        stream = synthetic_corpus(
+            args.corpus_tokens, vocab=min(cfg.vocab, 503), seed=args.seed
+        )
+    n_eval = max(len(stream) // 10, args.seq_len * 2 + 2)
+    train_stream, eval_stream = stream[:-n_eval], stream[-n_eval:]
+    loader = LMLoader(
+        train_stream, seq_len=args.seq_len, global_batch=args.global_batch,
+        seed=args.seed,
+    )
+    loader.tokens_per_step = args.seq_len * args.global_batch
+
+    opt = AdamW(
+        lr=warmup_cosine(args.lr, args.warmup, args.steps),
+        weight_decay=args.weight_decay,
+    )
+    opt_state = opt.init(params)
+    step_fn = jax.jit(
+        make_train_step(model, opt, policy,
+                        TrainStepConfig(microbatches=args.microbatches)),
+        donate_argnums=(0, 1),
+    )
+
+    def eval_fn(params, max_batches: int = 8):
+        losses = []
+        for batch in eval_batches(eval_stream, args.seq_len,
+                                  min(args.global_batch, 8),
+                                  max_batches=max_batches):
+            loss, _ = model.loss(params, batch, policy)
+            losses.append(float(loss))
+        ppl = float(np.exp(np.mean(losses))) if losses else float("nan")
+        return {"eval_loss": float(np.mean(losses)), "eval_ppl": ppl}
+
+    return model, params, opt, opt_state, loader, step_fn, eval_fn, policy
+
+
+def main() -> int:
+    args = build_argparser().parse_args()
+    from repro.checkpoint.manager import CheckpointConfig
+    from repro.train.loop import LoopConfig, run
+
+    (model, params, opt, opt_state, loader, step_fn, eval_fn,
+     policy) = make_everything(args)
+
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = CheckpointConfig(directory=args.ckpt_dir,
+                                interval=args.ckpt_interval)
+    loop_cfg = LoopConfig(
+        total_steps=args.steps,
+        metrics_path=args.metrics,
+        checkpoint=ckpt,
+        eval_every=args.eval_every,
+        handle_sigterm=True,
+    )
+    result, params, opt_state = run(
+        step_fn, params, opt_state, loader, loop_cfg, eval_fn=eval_fn
+    )
+    final_eval = eval_fn(params)
+    summary = {
+        "arch": args.arch,
+        "policy": policy.name,
+        "steps": result.last_step + 1,
+        "final_loss": result.last_metrics.get("loss"),
+        "resumed_from": result.resumed_from,
+        "stragglers": result.stragglers,
+        **final_eval,
+    }
+    print(json.dumps(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

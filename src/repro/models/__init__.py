@@ -1,0 +1,5 @@
+"""Model zoo: decoder LM, hybrid (zamba2), enc-dec (whisper), VLM, SSM."""
+
+from repro.models.registry import build_model
+
+__all__ = ["build_model"]

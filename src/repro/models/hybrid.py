@@ -1,0 +1,401 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every k-th layer with per-invocation LoRA deltas (arXiv:2411.15242).
+
+Layout: n_layers = G groups x [ (k-1) mamba blocks + 1 shared-attn ].  The
+shared block's base weights are a single parameter set (closure constant in
+the scan); each invocation adds its own low-rank delta W + A_g @ B_g, and —
+Zamba's signature trick — attends over concat(hidden, initial_embedding)
+(2*d_model) projected by the shared QKV.
+
+Quantization: the *effective* weights (base + LoRA) go through the QDQ
+chokepoint, which is what a deployment would quantize.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import QuantPolicy
+from repro.core.simulate import qmatmul
+from repro.dist import sharding as shd
+from repro.nn.attention import Attention, KVCache
+from repro.nn.ffn import MLP
+from repro.nn.linear import Embed
+from repro.nn.module import Box, stack_init, truncated_normal
+from repro.nn.norms import RMSNorm
+from repro.nn.ssm import Mamba2, SSMCache
+from repro.models.lm import GLOBAL_WINDOW, NEG_INF, _norm
+
+
+class HybridState(NamedTuple):
+    kv: Any  # (G, ...) shared-attn caches
+    ssm: Any  # (G, k-1, ...) mamba caches
+    x0: jnp.ndarray  # initial embedding (B, 1, d) for decode concat
+    position: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridLM:
+    cfg: ArchConfig
+
+    @property
+    def k(self) -> int:
+        return self.cfg.shared_attn_every
+
+    @property
+    def n_groups(self) -> int:
+        assert self.cfg.n_layers % self.k == 0, (self.cfg.n_layers, self.k)
+        return self.cfg.n_layers // self.k
+
+    def _mamba(self) -> Mamba2:
+        c = self.cfg
+        return Mamba2(
+            d_model=c.d_model, d_state=c.ssm_state, d_conv=c.ssm_conv,
+            expand=c.ssm_expand, head_dim=c.ssm_head_dim,
+            n_groups=c.ssm_groups, chunk=c.ssm_chunk,
+            param_dtype=c.param_dtype, dtype=c.dtype,
+        )
+
+    def _attn(self) -> Attention:
+        c = self.cfg
+        # Shared block attends over concat(x, x0): d_in = 2*d_model.
+        return Attention(
+            d_model=2 * c.d_model, n_heads=c.n_heads, n_kv=c.n_kv,
+            head_dim=c.head_dim_, rope_theta=c.rope_theta, use_rope=True,
+            param_dtype=c.param_dtype, dtype=c.dtype,
+            q_block=c.q_block, kv_block=c.kv_block,
+        )
+
+    def _mlp(self) -> MLP:
+        c = self.cfg
+        return MLP(c.d_model, c.d_ff, act=c.act, param_dtype=c.param_dtype,
+                   dtype=c.dtype)
+
+    # ----------------------------------------------------------------- init
+    def _mamba_block_init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"ln": _norm(self.cfg).init(k1),
+                "mamba": self._mamba().init(k2)}
+
+    def _lora_init(self, key):
+        c = self.cfg
+        r = c.lora_rank
+        pdt = jnp.dtype(c.param_dtype)
+        names = {"q": c.n_heads * c.head_dim_, "k": c.n_kv * c.head_dim_,
+                 "v": c.n_kv * c.head_dim_}
+        out = {}
+        ks = jax.random.split(key, len(names))
+        for (nm, od), kk in zip(names.items(), ks):
+            ka, _ = jax.random.split(kk)
+            out[nm] = {
+                "A": Box(truncated_normal(ka, (2 * c.d_model, r), pdt, 0.02),
+                         ("embed", "lora")),
+                "B": Box(jnp.zeros((r, od), pdt), ("lora", "qkv")),
+            }
+        return out
+
+    def init(self, key) -> dict:
+        c = self.cfg
+        kE, kM, kS, kL, kN, kO = jax.random.split(key, 6)
+
+        def group_init(gkey):
+            return stack_init(self._mamba_block_init, gkey, self.k - 1)
+
+        shared_keys = jax.random.split(kS, 4)
+        params = {
+            "embed": Embed(c.vocab_padded, c.d_model,
+                           param_dtype=c.param_dtype, dtype=c.dtype).init(kE),
+            "mamba_groups": stack_init(group_init, kM, self.n_groups),
+            "shared": {
+                "ln1": RMSNorm(2 * c.d_model, param_dtype=c.param_dtype,
+                               dtype=c.dtype).init(shared_keys[0]),
+                "attn": self._attn().init(shared_keys[1]),
+                "ln2": _norm(c).init(shared_keys[2]),
+                "mlp": self._mlp().init(shared_keys[3]),
+            },
+            "lora": stack_init(self._lora_init, kL, self.n_groups),
+            "final_norm": _norm(c).init(kN),
+        }
+        # Shared o-proj maps back to d_model (attn built at 2*d_model emits
+        # heads*head_dim; override its o kernel shape to land on d_model).
+        att = self._attn()
+        ko = jax.random.split(kO)[0]
+        params["shared"]["attn"]["o"] = {
+            "kernel": Box(
+                truncated_normal(
+                    ko, (att.n_heads * att.head_dim, c.d_model),
+                    jnp.dtype(c.param_dtype), (att.n_heads * att.head_dim) ** -0.5,
+                ),
+                ("qkv", "embed"),
+            )
+        }
+        return params
+
+    # ------------------------------------------------------------- internals
+    def _shared_qkv(self, sparams, lora, h2, policy):
+        """QKV with per-invocation LoRA folded into effective weights."""
+        att = self._attn()
+        out = {}
+        for nm in ("q", "k", "v"):
+            w = sparams["attn"][nm]["kernel"]
+            if type(w).__name__ == "CompressedKernel":
+                # int8-stored serving weights: LoRA deltas ride in fp, so
+                # reconstitute the dense kernel before folding them in.
+                from repro.models.serving_transforms import decompress_kernel
+
+                w = decompress_kernel(w, dtype=self.cfg.dtype)
+            delta = (lora[nm]["A"].astype(jnp.float32)
+                     @ lora[nm]["B"].astype(jnp.float32)).astype(w.dtype)
+            out[nm] = qmatmul(h2, w + delta, policy,
+                              site=f"shared/{nm}",
+                              compute_dtype=jnp.dtype(self.cfg.dtype))
+        return out
+
+    def _shared_block(self, sparams, lora, x, x0, positions, policy,
+                      cache: KVCache | None = None, position=None):
+        """Shared attention (+MLP) over concat(x, x0). Returns (x, cache)."""
+        c = self.cfg
+        att = self._attn()
+        B = x.shape[0]
+        h2 = jnp.concatenate([x, x0], axis=-1)
+        h2 = RMSNorm(2 * c.d_model, param_dtype=c.param_dtype,
+                     dtype=c.dtype).apply(sparams["ln1"], h2)
+        proj = self._shared_qkv(sparams, lora, h2, policy)
+        S = x.shape[1]
+        qh = proj["q"].reshape(B, S, c.n_heads, c.head_dim_)
+        kh = proj["k"].reshape(B, S, c.n_kv, c.head_dim_)
+        vh = proj["v"].reshape(B, S, c.n_kv, c.head_dim_)
+        from repro.nn.rotary import apply_rope
+
+        qh = apply_rope(qh, positions, c.rope_theta)
+        kh = apply_rope(kh, positions, c.rope_theta)
+        qh = shd.constrain(qh, ("batch", "seq", "heads", "head_dim"))
+
+        window = jnp.asarray(GLOBAL_WINDOW, jnp.int32)
+        if cache is None:
+            # full-sequence path
+            use_block = S >= att.blockwise_min_seq and S % att.q_block == 0
+            fn = att._blockwise if use_block else att._reference
+            out = fn(qh, kh, vh, positions, positions, window, policy)
+            new_cache = (kh.reshape(B, S, -1), vh.reshape(B, S, -1))
+        else:
+            # decode: write new kv into ring buffer
+            size = cache.k.shape[1]
+            slot = position % size
+            k_flat = kh.reshape(B, 1, -1).astype(cache.k.dtype)
+            v_flat = vh.reshape(B, 1, -1).astype(cache.v.dtype)
+            nk = jax.lax.dynamic_update_slice_in_dim(cache.k, k_flat, slot, 1)
+            nv = jax.lax.dynamic_update_slice_in_dim(cache.v, v_flat, slot, 1)
+            nk = shd.constrain(nk, ("batch", "kv_seq", "qkv"))
+            nv = shd.constrain(nv, ("batch", "kv_seq", "qkv"))
+            cache = KVCache(nk, nv, position + 1)
+            idx = jnp.arange(size, dtype=jnp.int32)
+            rounds = (position // size) * size
+            spos = idx + jnp.where(idx <= slot, rounds, rounds - size)
+            spos = jnp.where((spos > position) | (spos < 0), -1, spos)
+            kv = cache.k.reshape(B, size, c.n_kv, c.head_dim_)
+            vv = cache.v.reshape(B, size, c.n_kv, c.head_dim_)
+            qp = jnp.broadcast_to(position[None, None], (B, 1))
+            kp = jnp.broadcast_to(spos[None], (B, size))
+            out = att._reference(qh, kv, vv, qp, kp, window, policy)
+            new_cache = cache
+        out = out.reshape(B, S, -1)
+        y = qmatmul(out, sparams["attn"]["o"]["kernel"], policy,
+                    site="shared/o", compute_dtype=jnp.dtype(c.dtype))
+        x = x + y.astype(x.dtype)
+        h = _norm(c).apply(sparams["ln2"], x)
+        x = x + self._mlp().apply(sparams["mlp"], h, policy)
+        return shd.constrain(x, ("batch", "seq_res", "embed")), new_cache
+
+    # ---------------------------------------------------------------- apply
+    def apply(self, params, tokens, *, policy=QuantPolicy(), q=None,
+              return_hidden: bool = False, prefix_embeds=None):
+        del prefix_embeds
+        c = self.cfg
+        emb = Embed(c.vocab_padded, c.d_model, param_dtype=c.param_dtype,
+                    dtype=c.dtype)
+        x = emb.apply(params["embed"], tokens)
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        x0 = x  # initial embedding, reused at every shared-block invocation
+        shared = params["shared"]
+
+        def group_body(carry, xs):
+            xc = carry
+            gparams, lora = xs
+            for j in range(self.k - 1):
+                bp = jax.tree_util.tree_map(lambda a: a[j], gparams)
+                h = _norm(c).apply(bp["ln"], xc)
+                xc = xc + self._mamba().apply(bp["mamba"], h, policy)
+            xc, _ = self._shared_block(shared, lora, xc, x0, positions,
+                                       policy)
+            return xc, None
+
+        if c.scan_layers:
+            if c.remat != "none":
+                group_body = jax.checkpoint(group_body)
+            x, _ = jax.lax.scan(group_body,
+                                x, (params["mamba_groups"], params["lora"]))
+        else:
+            if c.remat != "none":
+                group_body = jax.checkpoint(group_body)
+            for g in range(self.n_groups):
+                gp = jax.tree_util.tree_map(lambda a: a[g],
+                                            params["mamba_groups"])
+                lo = jax.tree_util.tree_map(lambda a: a[g], params["lora"])
+                x, _ = group_body(x, (gp, lo))
+
+        x = _norm(c).apply(params["final_norm"], x)
+        if return_hidden:
+            return x, jnp.zeros((), jnp.float32)
+        logits = emb.attend(params["embed"], x, policy)
+        if c.vocab_padded != c.vocab:
+            mask = jnp.arange(c.vocab_padded) >= c.vocab
+            logits = jnp.where(mask, NEG_INF, logits)
+        return logits, jnp.zeros((), jnp.float32)
+
+    # -------------------------------------------------------------- serving
+    def prefill(self, params, tokens, *, policy=QuantPolicy(),
+                max_len: int | None = None):
+        c = self.cfg
+        emb = Embed(c.vocab_padded, c.d_model, param_dtype=c.param_dtype,
+                    dtype=c.dtype)
+        x = emb.apply(params["embed"], tokens)
+        B, S = tokens.shape
+        max_len = max_len or S
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        x0 = x
+        shared = params["shared"]
+        att = self._attn()
+
+        def group_body(carry, xs):
+            xc = carry
+            gparams, lora = xs
+            mcaches = []
+            for j in range(self.k - 1):
+                bp = jax.tree_util.tree_map(lambda a: a[j], gparams)
+                h = _norm(c).apply(bp["ln"], xc)
+                h, mc = self._mamba().apply(bp["mamba"], h, policy,
+                                            return_cache=True)
+                xc = xc + h
+                mcaches.append(mc)
+            xc, (kf, vf) = self._shared_block(shared, lora, xc, x0,
+                                              positions, policy)
+            kvc = att.fill_cache(kf, vf, max_len, policy=policy)
+            mstack = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *mcaches)
+            return xc, (kvc, mstack)
+
+        if c.scan_layers:
+            x, (kv, ssm) = jax.lax.scan(
+                group_body, x, (params["mamba_groups"], params["lora"]))
+        else:
+            kvs, ssms = [], []
+            for g in range(self.n_groups):
+                gp = jax.tree_util.tree_map(lambda a: a[g],
+                                            params["mamba_groups"])
+                lo = jax.tree_util.tree_map(lambda a: a[g], params["lora"])
+                x, (kvc, mst) = group_body(x, (gp, lo))
+                kvs.append(kvc)
+                ssms.append(mst)
+            kv = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *kvs)
+            ssm = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ssms)
+
+        x = _norm(c).apply(params["final_norm"], x[:, -1:, :])
+        logits = emb.attend(params["embed"], x, policy)
+        if c.vocab_padded != c.vocab:
+            mask = jnp.arange(c.vocab_padded) >= c.vocab
+            logits = jnp.where(mask, NEG_INF, logits)
+        state = HybridState(kv=kv, ssm=ssm, x0=x0[:, -1:, :],
+                            position=jnp.asarray(S, jnp.int32))
+        return logits[:, 0], state
+
+    def init_decode_state(self, batch: int, max_len: int,
+                          kv_quant: bool = False) -> HybridState:
+        # NOTE: kv_quant accepted for API parity; the shared block manages
+        # its ring buffer inline, so int8 KV storage is TransformerLM-only
+        # for now (documented in DESIGN.md §10).
+        del kv_quant
+        c = self.cfg
+        att = self._attn()
+        kv1 = att.init_cache(batch, max_len, dtype=c.dtype)
+        # Note: shared-attn KV flat dim is n_kv*head_dim (same as att).
+        kv = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (self.n_groups,) + a.shape),
+            kv1,
+        )
+        m1 = self._mamba().init_cache(batch, dtype=c.dtype)
+        ssm = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(
+                a[None, None], (self.n_groups, self.k - 1) + a.shape
+            ),
+            m1,
+        )
+        return HybridState(
+            kv=kv, ssm=ssm,
+            x0=jnp.zeros((batch, 1, c.d_model), jnp.dtype(c.dtype)),
+            position=jnp.zeros((), jnp.int32),
+        )
+
+    def decode_step(self, params, token, state: HybridState, *,
+                    policy=QuantPolicy(), q=None):
+        c = self.cfg
+        emb = Embed(c.vocab_padded, c.d_model, param_dtype=c.param_dtype,
+                    dtype=c.dtype)
+        x = emb.apply(params["embed"], token)
+        pos = state.position
+        positions = jnp.broadcast_to(pos[None, None], (x.shape[0], 1))
+        x0 = x
+        shared = params["shared"]
+
+        def group_body(carry, xs):
+            xc = carry
+            gparams, lora, kvc, mst = xs
+            new_m = []
+            for j in range(self.k - 1):
+                bp = jax.tree_util.tree_map(lambda a: a[j], gparams)
+                mc = jax.tree_util.tree_map(lambda a: a[j], mst)
+                h = _norm(c).apply(bp["ln"], xc)
+                h, mc = self._mamba().decode_step(bp["mamba"], h, mc,
+                                                  policy=policy)
+                xc = xc + h
+                new_m.append(mc)
+            xc, kvc = self._shared_block(shared, lora, xc, x0, positions,
+                                         policy, cache=kvc, position=pos)
+            mstack = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *new_m)
+            return xc, (kvc, mstack)
+
+        if c.scan_layers:
+            x, (kv, ssm) = jax.lax.scan(
+                group_body, x,
+                (params["mamba_groups"], params["lora"], state.kv, state.ssm),
+            )
+        else:
+            kvs, ssms = [], []
+            for g in range(self.n_groups):
+                sl = lambda a: a[g]
+                x, (kvc, mst) = group_body(
+                    x,
+                    (jax.tree_util.tree_map(sl, params["mamba_groups"]),
+                     jax.tree_util.tree_map(sl, params["lora"]),
+                     jax.tree_util.tree_map(sl, state.kv),
+                     jax.tree_util.tree_map(sl, state.ssm)),
+                )
+                kvs.append(kvc)
+                ssms.append(mst)
+            kv = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *kvs)
+            ssm = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ssms)
+
+        x = _norm(c).apply(params["final_norm"], x)
+        logits = emb.attend(params["embed"], x, policy)
+        if c.vocab_padded != c.vocab:
+            mask = jnp.arange(c.vocab_padded) >= c.vocab
+            logits = jnp.where(mask, NEG_INF, logits)
+        return logits[:, 0], HybridState(kv=kv, ssm=ssm, x0=state.x0,
+                                         position=pos + 1)

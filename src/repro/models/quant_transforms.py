@@ -1,0 +1,255 @@
+"""Model-level PTQ drivers: calibration -> static scales / SmoothQuant /
+GPTQ / RPTQ applied to a TransformerLM params tree.
+
+This is the JAX analogue of INT-FP-QSim's "replace the layers" step at the
+model level: the layers already carry quantizer hooks (policy + optional
+``q`` static-scale tree); these functions *produce* the folded weights and
+the ``q`` tree from calibration statistics.
+
+All drivers need eager per-layer execution: run the model with
+``cfg.scan_layers=False`` and ``cfg.remat='none'`` so Calibrator observers
+fire per site (see repro.core.calibration).
+
+Site-name contract (set by nn.* layer names threaded from models.lm):
+    blocks.{i}/attn/{q,k,v,o}/in      linear inputs
+    blocks.{i}/attn/bmm_{q,k,v}       attention BMM operands
+    blocks.{i}/attn/probs             attention probabilities
+    blocks.{i}/ffn/{wi,wo}/in         MLP inputs (wg shares wi's input)
+    blocks.{i}/mamba/{in_proj,out_proj}/in
+    embed/attend/in                   tied LM head input
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rptq as rptq_mod
+from repro.core import smoothquant as sq_mod
+from repro.core.calibration import Calibrator, max_alpha, mse_alpha
+from repro.core.formats import Format
+from repro.core.gptq import GPTQConfig, gptq_quantize
+from repro.core.policy import QuantPolicy
+
+
+# ---------------------------------------------------------------------------
+# Calibration pass
+# ---------------------------------------------------------------------------
+def calibrate(model, params, batches, policy: QuantPolicy,
+              collect_outer: bool = False) -> Calibrator:
+    """Run observation passes over ``batches`` (list of batch dicts)."""
+    calib = Calibrator(collect_outer=collect_outer)
+    with calib.observing():
+        for batch in batches:
+            model.apply(params, batch, policy)
+    return calib
+
+
+def solve_alphas(calib: Calibrator, fmt: Format, method: str = "mse",
+                 per_channel: bool = False) -> dict:
+    return calib.solve(fmt, method=method, per_channel=per_channel)
+
+
+# ---------------------------------------------------------------------------
+# Static-scale q tree
+# ---------------------------------------------------------------------------
+_SITE_RE = re.compile(
+    r"^blocks\.(\d+)/(attn|ffn|mamba)/([a-z_]+)(?:/in)?$"
+)
+
+# q-tree key for each site leaf name
+_LEAF_KEY = {
+    "q": "q", "k": "k", "v": "v", "o": "o",
+    "bmm_q": "bmm_q", "bmm_k": "bmm_k", "bmm_v": "bmm_v", "probs": "probs",
+    "wi": "wi", "wo": "wo",
+    "in_proj": "in_proj", "out_proj": "out_proj",
+}
+
+
+def build_qtree(n_layers: int, alphas: dict) -> dict:
+    """{site: alpha} -> q tree matching TransformerLM.apply(q=...).
+
+    Unmatched sites (e.g. embed/attend) are skipped — those fall back to
+    dynamic-max, which the benchmark methodology documents.
+    """
+    blocks = [dict() for _ in range(n_layers)]
+    for site, alpha in alphas.items():
+        m = _SITE_RE.match(site)
+        if not m:
+            continue
+        i, group, leaf = int(m.group(1)), m.group(2), m.group(3)
+        if leaf not in _LEAF_KEY:
+            continue
+        blocks[i].setdefault(group, {})[_LEAF_KEY[leaf]] = {
+            "in_alpha": jnp.asarray(alpha)
+        }
+    for b in blocks:
+        ffn = b.get("ffn")
+        if ffn and "wi" in ffn and "wg" not in ffn:
+            ffn["wg"] = ffn["wi"]  # gate sees the same input as wi
+    return {"blocks": blocks}
+
+
+def static_qtree(calib: Calibrator, fmt: Format, n_layers: int,
+                 method: str = "mse") -> dict:
+    """The paper's static activation calibration (§II-B1) as a q tree."""
+    return build_qtree(n_layers, solve_alphas(calib, fmt, method=method))
+
+
+# ---------------------------------------------------------------------------
+# SmoothQuant (paper §II-B3)
+# ---------------------------------------------------------------------------
+def _kernel_of(bparams, group: str, name: str):
+    return bparams[group][name]["kernel"]
+
+
+def apply_smoothquant(params, calib: Calibrator, *, alpha: float = 0.5,
+                      plus_one_norm: bool = False) -> dict:
+    """Fold SmoothQuant factors into ln1->qkv and ln2->(wi,wg).
+
+    Follows the reference implementation: only norm-preceded projections are
+    smoothed (o/wo have no foldable producer and stay unsmoothed).  Returns
+    a new params tree; ``params['blocks']`` must be a per-layer list.
+    """
+    blocks = params["blocks"]
+    assert isinstance(blocks, (list, tuple)), (
+        "apply_smoothquant requires unrolled (scan_layers=False) params")
+    new_blocks = []
+    for i, bp in enumerate(blocks):
+        bp = jax.tree_util.tree_map(lambda x: x, bp)  # shallow copy per leaf
+        if "attn" in bp:
+            site = f"blocks.{i}/attn/q/in"
+            if site in calib.stats:
+                act_absmax = calib.stats[site].ch_absmax
+                kernels = [bp["attn"][k]["kernel"] for k in ("q", "k", "v")]
+                w_absmax = np.max(
+                    [np.abs(np.asarray(w)).max(axis=1) for w in kernels],
+                    axis=0,
+                )
+                s = sq_mod.smoothing_factors(act_absmax, w_absmax, alpha)
+                sj = jnp.asarray(s)
+                for k in ("q", "k", "v"):
+                    w = bp["attn"][k]["kernel"]
+                    bp["attn"][k] = dict(bp["attn"][k])
+                    bp["attn"][k]["kernel"] = w * sj[:, None].astype(w.dtype)
+                bp["ln1"] = _fold_norm(bp["ln1"], sj, plus_one_norm)
+        if "ffn" in bp and "wi" in bp["ffn"]:
+            site = f"blocks.{i}/ffn/wi/in"
+            if site in calib.stats:
+                act_absmax = calib.stats[site].ch_absmax
+                names = [k for k in ("wi", "wg") if k in bp["ffn"]]
+                w_absmax = np.max(
+                    [np.abs(np.asarray(bp["ffn"][k]["kernel"])).max(axis=1)
+                     for k in names],
+                    axis=0,
+                )
+                s = sq_mod.smoothing_factors(act_absmax, w_absmax, alpha)
+                sj = jnp.asarray(s)
+                for k in names:
+                    w = bp["ffn"][k]["kernel"]
+                    bp["ffn"][k] = dict(bp["ffn"][k])
+                    bp["ffn"][k]["kernel"] = w * sj[:, None].astype(w.dtype)
+                bp["ln2"] = _fold_norm(bp["ln2"], sj, plus_one_norm)
+        new_blocks.append(bp)
+    out = dict(params)
+    out["blocks"] = new_blocks
+    return out
+
+
+def _fold_norm(norm_params: dict, s: jnp.ndarray, plus_one: bool) -> dict:
+    np_ = dict(norm_params)
+    scale = np_["scale"]
+    if plus_one:  # effective scale is (1 + w): (1+w)/s = 1 + w'
+        np_["scale"] = ((1.0 + scale.astype(jnp.float32)) / s - 1.0).astype(
+            scale.dtype
+        )
+    else:
+        np_["scale"] = (scale.astype(jnp.float32) / s).astype(scale.dtype)
+    if "bias" in np_:
+        b = np_["bias"]
+        np_["bias"] = (b.astype(jnp.float32) / s).astype(b.dtype)
+    return np_
+
+
+# ---------------------------------------------------------------------------
+# GPTQ (paper §II-B4)
+# ---------------------------------------------------------------------------
+_GPTQ_SITES = {
+    ("attn", "q"): "attn/q/in",
+    ("attn", "k"): "attn/q/in",   # same input as q (ln1 output)
+    ("attn", "v"): "attn/q/in",
+    ("attn", "o"): "attn/o/in",
+    ("ffn", "wi"): "ffn/wi/in",
+    ("ffn", "wg"): "ffn/wi/in",
+    ("ffn", "wo"): "ffn/wo/in",
+}
+
+
+def apply_gptq(params, calib: Calibrator, fmt: Format,
+               cfg: GPTQConfig = GPTQConfig(), *,
+               progress: Callable | None = None) -> tuple[dict, dict]:
+    """Replace every decoder linear kernel with its GPTQ-quantized version.
+
+    ``calib`` must have been collected with ``collect_outer=True`` (Hessians
+    H = X^T X per site).  Returns (new_params, info-per-site).
+    """
+    blocks = params["blocks"]
+    assert isinstance(blocks, (list, tuple)), "GPTQ requires unrolled params"
+    infos = {}
+    new_blocks = []
+    for i, bp in enumerate(blocks):
+        bp = jax.tree_util.tree_map(lambda x: x, bp)
+        for (group, name), site_suffix in _GPTQ_SITES.items():
+            if group not in bp or name not in bp[group]:
+                continue
+            site = f"blocks.{i}/{site_suffix}"
+            st = calib.stats.get(site)
+            if st is None or st.outer is None:
+                continue
+            w = np.asarray(bp[group][name]["kernel"], np.float32)
+            wq, info = gptq_quantize(w, st.outer, fmt, cfg)
+            bp[group] = dict(bp[group])
+            bp[group][name] = dict(bp[group][name])
+            bp[group][name]["kernel"] = jnp.asarray(
+                wq, dtype=params_dtype(params)
+            )
+            infos[f"blocks.{i}/{group}/{name}"] = info
+            if progress:
+                progress(i, group, name, info)
+        new_blocks.append(bp)
+    out = dict(params)
+    out["blocks"] = new_blocks
+    return out, infos
+
+
+def params_dtype(params):
+    leaves = jax.tree_util.tree_leaves(params)
+    for l in leaves:
+        if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating):
+            return l.dtype
+    return jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# RPTQ (paper §II-B5)
+# ---------------------------------------------------------------------------
+def rptq_qtree(calib: Calibrator, n_layers: int,
+               num_clusters: int = 8) -> tuple[dict, dict]:
+    """Cluster activation channels per site; per-channel alphas as a q tree.
+
+    Numerically identical to the reorder+cluster-scale scheme (the
+    permutation only matters for hardware layout — see core/rptq.py); the
+    perms are returned for the equivalence tests / a hardware backend.
+    """
+    alphas, perms = {}, {}
+    for site, st in calib.stats.items():
+        if st.ch_min is None:
+            continue
+        res = rptq_mod.solve(st.ch_min, st.ch_max, num_clusters=num_clusters)
+        alphas[site] = res.alpha_per_channel
+        perms[site] = res.perm
+    return build_qtree(n_layers, alphas), perms

@@ -1,0 +1,102 @@
+"""Uniform model facade over the families (dense/moe/ssm LM, hybrid,
+enc-dec, VLM) so the launcher / trainer / server see one interface:
+
+    model = build_model(cfg)
+    params = model.init(key)                    # Box tree (values + axes)
+    loss   = model.loss(params, batch, policy)  # batch: dict of arrays
+    logits, state = model.prefill(params, batch, policy, max_len)
+    logits, state = model.decode_step(params, token, state, policy)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import QuantPolicy
+from repro.models import lm as lm_mod
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.lm import TransformerLM, chunked_lm_loss, cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    inner: Any
+
+    # ------------------------------------------------------------------ api
+    def init(self, key):
+        return self.inner.init(key)
+
+    def _split_batch(self, batch):
+        tokens = batch["tokens"]
+        kw = {}
+        if self.cfg.family == "encdec":
+            kw["frames"] = batch["frames"]
+        if self.cfg.family == "vlm":
+            kw["prefix_embeds"] = batch["patch_embeds"]
+        return tokens, kw
+
+    def apply(self, params, batch, policy=QuantPolicy(), q=None,
+              return_hidden=False):
+        tokens, kw = self._split_batch(batch)
+        if self.cfg.family == "vlm":
+            return self.inner.apply(
+                params, tokens, policy=policy, q=q,
+                prefix_embeds=kw["prefix_embeds"],
+                return_hidden=return_hidden)
+        return self.inner.apply(params, tokens, policy=policy, q=q,
+                                return_hidden=return_hidden, **kw)
+
+    def loss(self, params, batch, policy=QuantPolicy(), q=None):
+        """Next-token CE (+ MoE aux).  Labels: batch['labels'], -1 masked."""
+        c = self.cfg
+        labels = batch["labels"]
+        if (
+            c.logits_chunk > 0
+            and isinstance(self.inner, TransformerLM)
+        ):
+            hidden, aux = self.apply(params, batch, policy, q,
+                                     return_hidden=True)
+            if c.family == "vlm":
+                np_ = batch["patch_embeds"].shape[1]
+                hidden = hidden[:, np_:, :]
+            ce = chunked_lm_loss(self.inner, params, hidden, labels, policy,
+                                 c.logits_chunk)
+        else:
+            logits, aux = self.apply(params, batch, policy, q)
+            if c.family == "vlm":
+                np_ = batch["patch_embeds"].shape[1]
+                logits = logits[:, np_:, :]
+            ce = cross_entropy(logits, labels, c.vocab)
+        return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch, policy=QuantPolicy(),
+                max_len: int | None = None):
+        tokens, kw = self._split_batch(batch)
+        if self.cfg.family == "vlm":
+            return self.inner.prefill(
+                params, tokens, policy=policy, max_len=max_len,
+                prefix_embeds=kw["prefix_embeds"])
+        return self.inner.prefill(params, tokens, policy=policy,
+                                  max_len=max_len, **kw)
+
+    def decode_step(self, params, token, state, policy=QuantPolicy()):
+        return self.inner.decode_step(params, token, state, policy=policy)
+
+    def init_decode_state(self, batch: int, max_len: int, **kw):
+        return self.inner.init_decode_state(batch, max_len, **kw)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "hybrid":
+        return Model(cfg, HybridLM(cfg))
+    if cfg.family == "encdec":
+        return Model(cfg, EncDecLM(cfg))
+    # dense / moe / ssm / vlm all ride on TransformerLM
+    return Model(cfg, TransformerLM(cfg))

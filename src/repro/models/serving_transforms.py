@@ -1,0 +1,184 @@
+"""Serving-mode weight transforms (beyond-paper §Perf iterations).
+
+The paper's simulator QDQs weights *inside every forward pass* — right for
+QAT/research, but at serving time weights are frozen, so:
+
+  * ``prequantize_weights``  — apply the weight quantizer ONCE offline and
+    serve with ``serving_policy(policy)`` (weight quantizer dropped).
+    Numerically identical (ABFP QDQ is idempotent: values already on the
+    per-group grid map to themselves) and removes the entire per-layer
+    runtime QDQ chain (convert/div/round/clamp/mul over every kernel) from
+    the decode graph.  §Perf: -35% memory term on qwen2 decode_32k.
+
+  * ``compress_weights``     — store kernels as int8 CODES + BF16
+    per-group scales (the paper's storage story made real).  Dense
+    dequantizes lazily; XLA fuses (codes * scale) into the matmul operand
+    read, so weight HBM traffic drops ~2x (bf16 -> int8) on top of
+    removing the QDQ chain.  Also halves checkpoint size.
+
+Both transforms walk ``kernel`` leaves of TransformerLM-family params and
+preserve tree structure otherwise.  The tied embedding table is NOT
+touched: it feeds the input lookup too, and pre-quantizing it would change
+input embeddings (the runtime path only QDQs the readout matmul).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import abfp as abfp_mod
+from repro.core.policy import QuantPolicy
+
+
+@jax.tree_util.register_pytree_node_class
+class CompressedKernel:
+    """int codes + per-group unit scales; metadata rides as pytree aux."""
+
+    __slots__ = ("codes", "scale", "axis", "pad", "k", "dtype")
+
+    def __init__(self, codes, scale, axis: int, pad: int, k: int,
+                 dtype: str):
+        self.codes = codes  # (..., N, G, n) int8 — contraction grouped last
+        self.scale = scale  # (..., N, G) bf16 unit scales (alpha / qmax)
+        self.axis = axis
+        self.pad = pad
+        self.k = k
+        self.dtype = dtype
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), (self.axis, self.pad, self.k,
+                                          self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    def __repr__(self):
+        return (f"CompressedKernel(codes={getattr(self.codes, 'shape', None)},"
+                f" scale={getattr(self.scale, 'shape', None)})")
+
+
+def _walk_kernels(params, fn):
+    """Apply fn(kernel_leaf) to every 'kernel' entry; keep structure."""
+
+    def rec(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "kernel" and (hasattr(v, "ndim")
+                                      or isinstance(v, tuple)):
+                    out[k] = fn(v)
+                else:
+                    out[k] = rec(v)
+            return out
+        if isinstance(node, (list, tuple)) and not hasattr(node, "ndim"):
+            t = type(node)
+            vals = [rec(v) for v in node]
+            if hasattr(node, "_fields"):  # NamedTuple
+                return t(*vals)
+            return t(vals)
+        return node
+
+    return rec(params)
+
+
+def prequantize_weights(params, policy: QuantPolicy):
+    """QDQ every kernel offline per ``policy.weight``; see module doc."""
+    tq = policy.weight
+    if tq is None:
+        return params
+    assert tq.scaler == "abfp", "prequantize supports the ABFP weight path"
+
+    def one(w):
+        axis = 0 if w.ndim == 2 else 1
+        return abfp_mod.abfp_qdq(
+            w, tq.fmt, axis=axis, n=tq.group,
+            scale_dtype=jnp.dtype(tq.scale_dtype),
+        ).astype(w.dtype)
+
+    return _walk_kernels(params, one)
+
+
+def serving_policy(policy: QuantPolicy) -> QuantPolicy:
+    """The runtime policy to pair with prequantized/compressed weights."""
+    if policy.weight is None:
+        return policy
+    return policy.replace(name=policy.name + "_served", weight=None)
+
+
+# ---------------------------------------------------------------------------
+# Real compressed storage: int codes + scales
+# ---------------------------------------------------------------------------
+def compress_weights(params, policy: QuantPolicy):
+    """kernel -> CompressedKernel(int8 codes, bf16 unit scales)."""
+    tq = policy.weight
+    assert tq is not None and tq.scaler == "abfp"
+
+    def one(w):
+        # contraction always sits at rank-2 (K,N / E,K,N / stacked L,K,N):
+        # store it END-RELATIVE so per-layer slices under scan still line up
+        codes, scales, (pad, k) = abfp_mod.abfp_quantize(
+            w, tq.fmt, axis=w.ndim - 2, n=tq.group, dtype=jnp.int8,
+            scale_dtype=jnp.dtype(tq.scale_dtype),
+        )
+        # `scales` are already UNIT scales (alpha/qmax); keep f32 — they are
+        # 1/group of the codes count, and f32 keeps serving numerics exact.
+        return CompressedKernel(codes, scales.astype(jnp.float32),
+                                -2, pad, k, str(w.dtype))
+
+    return _walk_kernels(params, one)
+
+
+def compress_axes(axes_tree, compressed_sds_tree):
+    """Mirror ``compress_weights`` on the logical-axes tree.
+
+    For a kernel with axes (a_contract, a_out) the codes are laid out
+    (a_out, G, n) and scales (a_out, G) — sharding follows the surviving
+    output axis; group dims replicate.  Pytree aux metadata is copied from
+    the compressed SDS tree so treedefs match exactly under jit.
+    """
+
+    def _is_axes(x):
+        return x is None or (
+            type(x) is tuple
+            and all(e is None or isinstance(e, str) for e in x)
+        )
+
+    def rec(ax_node, sds_node):
+        if isinstance(sds_node, CompressedKernel):
+            axes = ax_node  # original kernel axes tuple
+            lead = tuple(axes[:-2]) if len(axes) > 2 else ()
+            a_out = axes[-1]
+            return CompressedKernel(
+                codes=lead + (a_out, None, None),
+                scale=lead + (a_out, None),
+                axis=sds_node.axis, pad=sds_node.pad, k=sds_node.k,
+                dtype=sds_node.dtype,
+            )
+        if isinstance(ax_node, dict):
+            return {k: rec(ax_node[k], sds_node[k]) for k in ax_node}
+        if isinstance(ax_node, (list, tuple)) and not _is_axes(ax_node):
+            t = type(ax_node)
+            vals = [rec(a, s) for a, s in zip(ax_node, sds_node)]
+            if hasattr(ax_node, "_fields"):
+                return t(*vals)
+            return t(vals)
+        return ax_node
+
+    return rec(axes_tree, compressed_sds_tree)
+
+
+def decompress_kernel(entry: CompressedKernel, dtype=None):
+    """codes+scales -> dense kernel (fused by XLA into the consumer)."""
+    dt = jnp.dtype(dtype or entry.dtype)
+    w = entry.codes.astype(dt) * entry.scale.astype(dt)[..., None]
+    # (…, N, G, n) -> flatten -> unpad -> contraction back to rank-2
+    w = w.reshape(*w.shape[:-2], w.shape[-2] * w.shape[-1])
+    if entry.pad:
+        w = w[..., :entry.k]
+    return jnp.moveaxis(w, -1, entry.axis)  # axis == -2 (end-relative)
+
+
+def is_compressed(kernel) -> bool:
+    return isinstance(kernel, CompressedKernel)

@@ -1,0 +1,5 @@
+"""Functional neural-net substrate: pytree params + logical sharding axes."""
+
+from repro.nn.module import Box, unbox, axes_of, stack_init
+
+__all__ = ["Box", "unbox", "axes_of", "stack_init"]

@@ -1,0 +1,512 @@
+"""Attention: GQA, sliding-window, logit softcap, blockwise (flash-style),
+KV cache (fp or quantized), cross-attention — with INT-FP-QSim BMM hooks.
+
+Three compute paths:
+  * reference  — materializes scores; used for small seqs / benchmark-exact
+                 quantization of attention probabilities.
+  * blockwise  — running-softmax scan over KV blocks (Rabe-Staats /
+                 FlashAttention recurrence in pure jnp): 32k prefill never
+                 materializes S^2.  Quantizes q/k/v per block; probs are
+                 quantized per-block (documented deviation, scale-equivalent).
+  * decode     — one-token query against the cache; GSPMD's partial-softmax
+                 over a seq-sharded cache reproduces flash-decoding.
+
+The *window* is a traced per-layer scalar so scan-over-layers can alternate
+local/global (gemma2) without unrolling: window >= S means global.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.core.simulate import qdq_activation
+from repro.dist import sharding as shd
+from repro.nn.linear import Dense
+from repro.nn.module import Box
+from repro.nn.rotary import apply_rope
+
+NEG_INF = -1e9  # mask value (safe in bf16/f32)
+
+
+class KVCache(NamedTuple):
+    """Decode cache. k/v: (B, S_max, n_kv * head_dim) flat (even sharding).
+
+    int8 storage mode (policy.kv_cache == 'int8'): k/v hold int8 codes and
+    k_scale/v_scale hold per-(slot, kv_head) f32 unit scales — halves cache
+    HBM capacity AND read traffic per decode step (§Perf)."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    # int32 scalar per batch-constant position (all requests aligned per step)
+    length: jnp.ndarray
+    k_scale: jnp.ndarray | None = None  # (B, S_max, n_kv) f32, int8 mode
+    v_scale: jnp.ndarray | None = None
+
+
+def _kv_quantize(x4: jnp.ndarray):
+    """(…, n_kv, D) -> int8 codes (flat) + per-(…, head) unit scales."""
+    alpha = jnp.max(jnp.abs(x4), axis=-1)  # (..., n_kv)
+    scale = jnp.maximum(alpha.astype(jnp.float32), 1e-12) / 127.0
+    codes = jnp.clip(
+        jnp.round(x4.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return codes, scale
+
+
+def _kv_dequantize(codes_flat, scale, n_kv: int, head_dim: int, dtype):
+    """int8 flat codes + (…, n_kv) scales -> (…, n_kv, D) values."""
+    c4 = codes_flat.reshape(*codes_flat.shape[:-1], n_kv, head_dim)
+    return (c4.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None or cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class Attention:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    causal: bool = True
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    softcap: float | None = None
+    query_scale: float | None = None  # default 1/sqrt(head_dim)
+    param_dtype: str = "float32"
+    dtype: str = "float32"
+    q_block: int = 512
+    kv_block: int = 512
+    blockwise_min_seq: int = 1024  # use blockwise above this length
+    use_flash_kernel: bool = False  # fused Pallas path (TPU; no softcap/SWA)
+    name: str = "attn"
+
+    # ---------------------------------------------------------------- init
+    def init(self, key) -> dict:
+        kq, kk, kv, ko = jax.random.split(key, 4)
+        mk = lambda i, o, ax_o, k, name: Dense(
+            i, o, use_bias=self.qkv_bias, in_axis="embed", out_axis=ax_o,
+            param_dtype=self.param_dtype, dtype=self.dtype, name=name,
+        ).init(k)
+        p = {
+            "q": mk(self.d_model, self.n_heads * self.head_dim, "qkv", kq, "q"),
+            "k": mk(self.d_model, self.n_kv * self.head_dim, "qkv", kk, "k"),
+            "v": mk(self.d_model, self.n_kv * self.head_dim, "qkv", kv, "v"),
+        }
+        o = Dense(
+            self.n_heads * self.head_dim, self.d_model, use_bias=False,
+            in_axis="qkv", out_axis="embed",
+            param_dtype=self.param_dtype, dtype=self.dtype, name="o",
+        )
+        p["o"] = o.init(ko)
+        return p
+
+    # ------------------------------------------------------------- helpers
+    def _dense(self, which: str, out_dim: int, in_dim: int | None = None):
+        return Dense(
+            in_dim or self.d_model, out_dim, use_bias=self.qkv_bias
+            if which in ("q", "k", "v") else False,
+            in_axis="embed" if which != "o" else "qkv",
+            out_axis="qkv" if which != "o" else "embed",
+            param_dtype=self.param_dtype, dtype=self.dtype,
+            name=f"{self.name}/{which}",
+        )
+
+    def _project_qkv(self, params, x, positions, policy, q=None):
+        B, S, _ = x.shape
+        qh = self._dense("q", self.n_heads * self.head_dim).apply(
+            params["q"], x, policy, q=None if q is None else q.get("q")
+        )
+        kh = self._dense("k", self.n_kv * self.head_dim).apply(
+            params["k"], x, policy, q=None if q is None else q.get("k")
+        )
+        vh = self._dense("v", self.n_kv * self.head_dim).apply(
+            params["v"], x, policy, q=None if q is None else q.get("v")
+        )
+        qh = qh.reshape(B, S, self.n_heads, self.head_dim)
+        kh = kh.reshape(B, S, self.n_kv, self.head_dim)
+        vh = vh.reshape(B, S, self.n_kv, self.head_dim)
+        if self.use_rope:
+            qh = apply_rope(qh, positions, self.rope_theta)
+            kh = apply_rope(kh, positions, self.rope_theta)
+        qh = shd.constrain(qh, ("batch", "seq", "heads", "head_dim"))
+        kh = shd.constrain(kh, ("batch", "seq", "kv_heads", "head_dim"))
+        vh = shd.constrain(vh, ("batch", "seq", "kv_heads", "head_dim"))
+        return qh, kh, vh
+
+    def _scale(self) -> float:
+        return (
+            self.query_scale
+            if self.query_scale is not None
+            else self.head_dim**-0.5
+        )
+
+    def _maybe_quant_qkv(self, policy: QuantPolicy, qh, kh, vh,
+                         q: dict | None = None, skip_kv: bool = False):
+        """QDQ attention-BMM operands along their contraction dims:
+        q,k along head_dim (QK^T); v along its seq axis (probs@V).
+        ``q``: optional static alphas {'bmm_q': {'in_alpha': ...}, ...}.
+        ``skip_kv``: cache entries were quantized at write time (policy
+        kv_cache='on_write') — only q needs QDQ here."""
+        if not (policy.enabled and policy.attn_bmm and policy.input):
+            return qh, kh, vh
+        tq = policy.input
+        geta = (lambda k: None) if q is None else (
+            lambda k: (q.get(k) or {}).get("in_alpha"))
+        qh = qdq_activation(qh, tq, axis=-1, site=self.name + "/bmm_q",
+                            alpha=geta("bmm_q"))
+        if not skip_kv:
+            kh = qdq_activation(kh, tq, axis=-1, site=self.name + "/bmm_k",
+                                alpha=geta("bmm_k"))
+            vh = qdq_activation(vh, tq, axis=1, site=self.name + "/bmm_v",
+                                alpha=geta("bmm_v"))
+        return qh, kh, vh
+
+    # -------------------------------------------------- reference attention
+    def _reference(self, qh, kh, vh, q_pos, kv_pos, window, policy,
+                   q=None, kv_prequant: bool = False):
+        G = self.n_heads // self.n_kv
+        B, S, H, D = qh.shape
+        T = kh.shape[1]
+        qh, kh, vh = self._maybe_quant_qkv(policy, qh, kh, vh, q,
+                                           skip_kv=kv_prequant)
+        qg = qh.reshape(B, S, self.n_kv, G, D)
+        # Native-dtype operands + f32 accumulation (MXU semantics): avoids
+        # materializing f32 copies of the (huge) K cache — see §Perf it.1.
+        scores = jnp.einsum(
+            "bskgd,btkd->bkgst", qg, kh,
+            preferred_element_type=jnp.float32,
+        ) * self._scale()
+        scores = _softcap(scores, self.softcap)
+        mask = self._mask(q_pos, kv_pos, window)  # (B?, S, T)
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        if policy.enabled and policy.attn_bmm and policy.input is not None:
+            palpha = None if q is None else (
+                (q.get("probs") or {}).get("in_alpha"))
+            probs = qdq_activation(
+                probs, policy.input, axis=-1, site=self.name + "/probs",
+                alpha=palpha,
+            )
+        out = jnp.einsum(
+            "bkgst,btkd->bskgd", probs.astype(vh.dtype), vh,
+            preferred_element_type=jnp.float32,
+        )
+        return out.reshape(B, S, H, D).astype(jnp.dtype(self.dtype))
+
+    def _mask(self, q_pos, kv_pos, window):
+        """(B, S, T) boolean validity mask given absolute positions."""
+        qp = q_pos[:, :, None]
+        kp = kv_pos[:, None, :]
+        m = kp >= 0  # padded/unwritten slots carry position -1
+        if self.causal:
+            m &= kp <= qp
+        # window is a traced scalar; window >= S means global.
+        m &= kp > qp - window
+        return m
+
+    # -------------------------------------------------- blockwise attention
+    def _blockwise(self, qh, kh, vh, q_pos, kv_pos, window, policy,
+                   q=None):
+        B, S, H, D = qh.shape
+        T = kh.shape[1]
+        qb, kb = min(self.q_block, S), min(self.kv_block, T)
+        nq, nk = S // qb, T // kb
+        assert S % qb == 0 and T % kb == 0, (S, T, qb, kb)
+        G = self.n_heads // self.n_kv
+        scale = self._scale()
+        qh, kh, vh = self._maybe_quant_qkv(policy, qh, kh, vh, q)
+        tq = policy.input if (policy.enabled and policy.attn_bmm) else None
+        _palpha = None if q is None else (
+            (q.get("probs") or {}).get("in_alpha"))
+
+        qs = qh.reshape(B, nq, qb, self.n_kv, G, D)
+        qp = q_pos.reshape(B, nq, qb)
+        ks = kh.reshape(B, nk, kb, self.n_kv, D)
+        vs = vh.reshape(B, nk, kb, self.n_kv, D)
+        kp = kv_pos.reshape(B, nk, kb)
+
+        def q_chunk(args):
+            qc, qpc = args  # (B, qb, KV, G, D), (B, qb)
+
+            def kv_step(carry, kv):
+                m_run, l_run, acc = carry
+                kc, vc, kpc = kv  # (B, kb, KV, D), (B, kb)
+                s = jnp.einsum(
+                    "bskgd,btkd->bkgst", qc, kc,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+                s = _softcap(s, self.softcap)
+                mask = self._mask(qpc, kpc, window)  # (B, qb, kb)
+                s = jnp.where(mask[:, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m_run, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                if tq is not None:
+                    p = qdq_activation(p, tq, axis=-1,
+                                       site=self.name + "/probs",
+                                       alpha=_palpha)
+                corr = jnp.exp(m_run - m_new)
+                l_new = l_run * corr + p.sum(axis=-1)
+                pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(vc.dtype),
+                                vc, preferred_element_type=jnp.float32)
+                acc = acc * corr[..., None] + pv
+                return (m_new, l_new, acc), None
+
+            m0 = jnp.full((B, self.n_kv, G, qb), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, self.n_kv, G, qb), jnp.float32)
+            a0 = jnp.zeros((B, self.n_kv, G, qb, D), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (ks.swapaxes(0, 1), vs.swapaxes(0, 1), kp.swapaxes(0, 1)),
+            )
+            out = acc / jnp.maximum(l, 1e-20)[..., None]  # (B,KV,G,qb,D)
+            return out.transpose(0, 3, 1, 2, 4)  # (B, qb, KV, G, D)
+
+        outs = jax.lax.map(q_chunk, (qs.swapaxes(0, 1), qp.swapaxes(0, 1)))
+        out = outs.swapaxes(0, 1).reshape(B, S, H, D)
+        return out.astype(jnp.dtype(self.dtype))
+
+    # --------------------------------------------------------- public apply
+    def apply(
+        self,
+        params: dict,
+        x: jnp.ndarray,
+        *,
+        positions: jnp.ndarray,
+        policy: QuantPolicy,
+        window=None,
+        q: dict | None = None,
+        kv_override: tuple | None = None,  # (k, v, kv_positions) for cross
+        return_kv: bool = False,
+    ) -> jnp.ndarray:
+        """Full-sequence attention (training / prefill)."""
+        B, S, _ = x.shape
+        qh, kh, vh = self._project_qkv(params, x, positions, policy, q)
+        kv_pos = positions
+        if kv_override is not None:
+            kh, vh, kv_pos = kv_override
+        T = kh.shape[1]
+        if window is None:
+            window = jnp.asarray(max(T, S) + 1, jnp.int32)
+        use_block = (
+            max(S, T) >= self.blockwise_min_seq
+            and S % min(self.q_block, S) == 0
+            and T % min(self.kv_block, T) == 0
+        )
+        flash_ok = (
+            self.use_flash_kernel
+            and self.softcap is None
+            and kv_override is None
+            and S == T  # self-attention, standard causal layout
+            and not (policy.enabled and policy.attn_bmm
+                     and policy.input is not None)
+        )
+        if flash_ok:
+            from repro.kernels import ops as kops
+
+            out = kops.flash_attention_gqa(
+                qh, kh, vh, scale=self._scale(), causal=self.causal,
+                block_q=min(self.q_block, S), block_k=min(self.kv_block, T),
+            )
+        else:
+            fn = self._blockwise if use_block else self._reference
+            out = fn(qh, kh, vh, positions, kv_pos, window, policy, q=q)
+        out = shd.constrain(out, ("batch", "seq", "heads", "head_dim"))
+        o_dense = Dense(
+            self.n_heads * self.head_dim, self.d_model,
+            in_axis="qkv", out_axis="embed",
+            param_dtype=self.param_dtype, dtype=self.dtype,
+            name=f"{self.name}/o",
+        )
+        y = o_dense.apply(
+            params["o"], out.reshape(B, S, -1), policy,
+            q=None if q is None else q.get("o"),
+        )
+        y = shd.constrain(y, ("batch", "seq_res", "embed"))
+        if return_kv:
+            return y, (kh.reshape(B, T, -1), vh.reshape(B, T, -1))
+        return y
+
+    def fill_cache(self, kh_flat, vh_flat, size: int,
+                   policy: QuantPolicy | None = None) -> KVCache:
+        """Build a ring-buffer cache from prefill K/V (B, S, flat).
+
+        With ``policy.kv_cache == 'on_write'`` the entries are quantized
+        here (K per head_dim group — exact; V along seq — exact at prefill
+        because the full sequence is present)."""
+        B, S, F = kh_flat.shape
+        if (policy is not None and policy.enabled and policy.attn_bmm
+                and policy.input is not None
+                and policy.kv_cache == "on_write"):
+            kh4 = kh_flat.reshape(B, S, self.n_kv, self.head_dim)
+            vh4 = vh_flat.reshape(B, S, self.n_kv, self.head_dim)
+            kh4 = qdq_activation(kh4, policy.input, axis=-1,
+                                 site=self.name + "/bmm_k")
+            vh4 = qdq_activation(vh4, policy.input, axis=1,
+                                 site=self.name + "/bmm_v")
+            kh_flat = kh4.reshape(B, S, F)
+            vh_flat = vh4.reshape(B, S, F)
+        take = min(S, size)
+        idx = (jnp.arange(S - take, S) % size).astype(jnp.int32)
+        if policy is not None and policy.kv_cache == "int8":
+            kc, ks = _kv_quantize(
+                kh_flat.reshape(B, S, self.n_kv, self.head_dim))
+            vc, vs = _kv_quantize(
+                vh_flat.reshape(B, S, self.n_kv, self.head_dim))
+            kc = kc.reshape(B, S, F)
+            vc = vc.reshape(B, S, F)
+            k = jnp.zeros((B, size, F), jnp.int8).at[:, idx].set(
+                kc[:, -take:])
+            v = jnp.zeros((B, size, F), jnp.int8).at[:, idx].set(
+                vc[:, -take:])
+            k_scale = jnp.zeros((B, size, self.n_kv), jnp.float32).at[
+                :, idx].set(ks[:, -take:])
+            v_scale = jnp.zeros((B, size, self.n_kv), jnp.float32).at[
+                :, idx].set(vs[:, -take:])
+            k = shd.constrain(k, ("batch", "kv_seq", "qkv"))
+            v = shd.constrain(v, ("batch", "kv_seq", "qkv"))
+            return KVCache(k=k, v=v, length=jnp.asarray(S, jnp.int32),
+                           k_scale=k_scale, v_scale=v_scale)
+        k = jnp.zeros((B, size, F), kh_flat.dtype).at[:, idx].set(
+            kh_flat[:, -take:]
+        )
+        v = jnp.zeros((B, size, F), vh_flat.dtype).at[:, idx].set(
+            vh_flat[:, -take:]
+        )
+        k = shd.constrain(k, ("batch", "kv_seq", "qkv"))
+        v = shd.constrain(v, ("batch", "kv_seq", "qkv"))
+        return KVCache(k=k, v=v, length=jnp.asarray(S, jnp.int32))
+
+    # ------------------------------------------------------------ decoding
+    def init_cache(
+        self, batch: int, max_len: int, dtype=None, window: int | None = None,
+        quantized: bool = False,
+    ) -> KVCache:
+        """Ring-buffer cache of size min(max_len, window) (SWA truncates).
+
+        ``quantized``: int8 codes + per-(slot, head) f32 scales (§Perf)."""
+        size = max_len if window is None else min(max_len, window)
+        dt = jnp.dtype(dtype or self.dtype)
+        flat = self.n_kv * self.head_dim
+        if quantized:
+            return KVCache(
+                k=jnp.zeros((batch, size, flat), jnp.int8),
+                v=jnp.zeros((batch, size, flat), jnp.int8),
+                length=jnp.zeros((), jnp.int32),
+                k_scale=jnp.zeros((batch, size, self.n_kv), jnp.float32),
+                v_scale=jnp.zeros((batch, size, self.n_kv), jnp.float32),
+            )
+        return KVCache(
+            k=jnp.zeros((batch, size, flat), dt),
+            v=jnp.zeros((batch, size, flat), dt),
+            length=jnp.zeros((), jnp.int32),
+        )
+
+    def decode_step(
+        self,
+        params: dict,
+        x: jnp.ndarray,  # (B, 1, d_model)
+        cache: KVCache,
+        *,
+        position: jnp.ndarray,  # int32 scalar (aligned) or (B,) per-slot
+        policy: QuantPolicy,
+        window=None,
+        q: dict | None = None,
+    ) -> tuple[jnp.ndarray, KVCache]:
+        B = x.shape[0]
+        position = jnp.asarray(position, jnp.int32)
+        aligned = position.ndim == 0  # all rows at the same position
+        pos_vec = jnp.broadcast_to(jnp.atleast_1d(position), (B,))
+        pos_b = pos_vec[:, None]  # (B, 1) query positions
+        qh, kh, vh = self._project_qkv(params, x, pos_b, policy, q)
+        int8_cache = cache.k_scale is not None
+        kv_on_write = (policy.enabled and policy.attn_bmm
+                       and policy.input is not None
+                       and policy.kv_cache == "on_write")
+        if kv_on_write:
+            # quantize ONCE at write time; reads skip the re-QDQ (exact for
+            # K's head_dim groups; per-token for V — documented deviation)
+            kh = qdq_activation(kh, policy.input, axis=-1,
+                                site=self.name + "/bmm_k")
+            vh = qdq_activation(vh, policy.input, axis=-1,
+                                site=self.name + "/bmm_v")
+        size = cache.k.shape[1]
+        new_ks = new_vs = None
+        if int8_cache:
+            # int8 storage: the quantization IS the write (per token, head)
+            kc, ks = _kv_quantize(kh)  # kh: (B, 1, n_kv, D)
+            vc, vs = _kv_quantize(vh)
+            k_flat = kc.reshape(B, 1, -1)
+            v_flat = vc.reshape(B, 1, -1)
+        else:
+            k_flat = kh.reshape(B, 1, -1).astype(cache.k.dtype)
+            v_flat = vh.reshape(B, 1, -1).astype(cache.v.dtype)
+        if aligned:
+            # fast path: one dynamic_update_slice for the whole batch
+            slot = position % size
+            new_k = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k_flat, slot, 1)
+            new_v = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v_flat, slot, 1)
+            if int8_cache:
+                new_ks = jax.lax.dynamic_update_slice_in_dim(
+                    cache.k_scale, ks, slot, 1)
+                new_vs = jax.lax.dynamic_update_slice_in_dim(
+                    cache.v_scale, vs, slot, 1)
+        else:
+            # per-slot positions (continuous batching): batched scatter
+            slot_b = pos_vec % size
+            rows = jnp.arange(B)
+            new_k = cache.k.at[rows, slot_b].set(k_flat[:, 0])
+            new_v = cache.v.at[rows, slot_b].set(v_flat[:, 0])
+            if int8_cache:
+                new_ks = cache.k_scale.at[rows, slot_b].set(ks[:, 0])
+                new_vs = cache.v_scale.at[rows, slot_b].set(vs[:, 0])
+        new_k = shd.constrain(new_k, ("batch", "kv_seq", "qkv"))
+        new_v = shd.constrain(new_v, ("batch", "kv_seq", "qkv"))
+        # length stays a scalar high-water mark even for vector positions
+        cache = KVCache(new_k, new_v, jnp.max(position) + 1,
+                        k_scale=new_ks, v_scale=new_vs)
+
+        # Absolute positions stored in each slot of the ring buffer.
+        idx = jnp.arange(size, dtype=jnp.int32)[None]  # (1, size)
+        slot_b = (pos_vec % size)[:, None]
+        ring_rounds = (pos_vec // size)[:, None] * size
+        slot_pos = idx + jnp.where(idx <= slot_b, ring_rounds,
+                                   ring_rounds - size)
+        slot_pos = jnp.where(slot_pos > pos_vec[:, None], -1, slot_pos)
+        slot_pos = jnp.where(slot_pos < 0, -1, slot_pos)  # unwritten
+
+        dt = jnp.dtype(self.dtype)
+        if int8_cache:
+            kv = _kv_dequantize(cache.k, cache.k_scale, self.n_kv,
+                                self.head_dim, dt)
+            vv = _kv_dequantize(cache.v, cache.v_scale, self.n_kv,
+                                self.head_dim, dt)
+        else:
+            kv = cache.k.reshape(B, size, self.n_kv, self.head_dim)
+            vv = cache.v.reshape(B, size, self.n_kv, self.head_dim)
+        if window is None:
+            window = jnp.asarray(size + 1, jnp.int32)
+        qp = pos_vec[:, None]
+        kp = slot_pos
+        out = self._reference(qh, kv, vv, qp, kp, window, policy, q=q,
+                              kv_prequant=kv_on_write or int8_cache)
+        o_dense = Dense(
+            self.n_heads * self.head_dim, self.d_model,
+            in_axis="qkv", out_axis="embed",
+            param_dtype=self.param_dtype, dtype=self.dtype,
+            name=f"{self.name}/o",
+        )
+        y = o_dense.apply(params["o"], out.reshape(B, 1, -1), policy,
+                          q=None if q is None else q.get("o"))
+        return shd.constrain(y, ("batch", "seq_res", "embed")), cache

@@ -1,0 +1,73 @@
+"""Feed-forward blocks: dense (relu/gelu/silu) and gated (swiglu/geglu)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.dist import sharding as shd
+from repro.nn.linear import Dense
+
+_ACTS = {
+    "relu": jax.nn.relu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "silu": jax.nn.silu,
+}
+
+GATED = {"swiglu": "silu", "geglu": "gelu", "reglu": "relu"}
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP:
+    d_model: int
+    d_ff: int
+    act: str = "swiglu"  # gated or plain activation name
+    use_bias: bool = False
+    param_dtype: str = "float32"
+    dtype: str = "float32"
+    name: str = "mlp"
+
+    @property
+    def gated(self) -> bool:
+        return self.act in GATED
+
+    def _wi(self):
+        return Dense(
+            self.d_model, self.d_ff, use_bias=self.use_bias,
+            in_axis="embed", out_axis="mlp",
+            param_dtype=self.param_dtype, dtype=self.dtype,
+            name=f"{self.name}/wi",
+        )
+
+    def _wo(self):
+        return Dense(
+            self.d_ff, self.d_model, use_bias=self.use_bias,
+            in_axis="mlp", out_axis="embed",
+            param_dtype=self.param_dtype, dtype=self.dtype,
+            name=f"{self.name}/wo",
+        )
+
+    def init(self, key) -> dict:
+        ki, kg, ko = jax.random.split(key, 3)
+        p = {"wi": self._wi().init(ki), "wo": self._wo().init(ko)}
+        if self.gated:
+            p["wg"] = self._wi().init(kg)
+        return p
+
+    def apply(
+        self, params: dict, x: jnp.ndarray, policy: QuantPolicy,
+        q: dict | None = None,
+    ) -> jnp.ndarray:
+        getq = (lambda k: None) if q is None else q.get
+        h = self._wi().apply(params["wi"], x, policy, q=getq("wi"))
+        if self.gated:
+            g = self._wi().apply(params["wg"], x, policy, q=getq("wg"))
+            h = _ACTS[GATED[self.act]](g) * h
+        else:
+            h = _ACTS[self.act](h)
+        h = shd.constrain(h, ("batch", "seq", "mlp"))
+        y = self._wo().apply(params["wo"], h, policy, q=getq("wo"))
+        return shd.constrain(y, ("batch", "seq_res", "embed"))

@@ -1,0 +1,132 @@
+"""Dense layer with the INT-FP-QSim quantization chokepoint attached.
+
+Kernels are stored flat (K, N) — multi-dim heads are reshaped by callers —
+so the quant simulator, the Pallas kernels and the int8 native path all see
+one canonical contraction layout, and flat feature dims divide evenly on the
+production mesh (see DESIGN.md §4).
+
+Supports the SmoothQuant folded form: if params carry a 'smooth' vector the
+input is divided by it (the kernel has been pre-multiplied), eqns in
+core/smoothquant.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.core.simulate import qmatmul
+from repro.dist import sharding as shd
+from repro.nn.module import Box, truncated_normal
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    in_dim: int
+    out_dim: int
+    use_bias: bool = False
+    in_axis: str = "embed"
+    out_axis: str = "mlp"
+    param_dtype: str = "float32"
+    dtype: str = "float32"
+    name: str = "dense"
+    init_std: float | None = None  # default: 1/sqrt(in_dim) scaled normal
+
+    def init(self, key) -> dict:
+        std = self.init_std
+        if std is None:
+            std = self.in_dim**-0.5
+        pdt = jnp.dtype(self.param_dtype)
+        p = {
+            "kernel": Box(
+                truncated_normal(key, (self.in_dim, self.out_dim), pdt, std),
+                (self.in_axis, self.out_axis),
+            )
+        }
+        if self.use_bias:
+            p["bias"] = Box(jnp.zeros((self.out_dim,), pdt), (self.out_axis,))
+        return p
+
+    def apply(
+        self,
+        params: dict,
+        x: jnp.ndarray,
+        policy: QuantPolicy,
+        *,
+        q: dict | None = None,
+    ) -> jnp.ndarray:
+        """q: optional quant-state slice {'in_alpha': ...} for static scales."""
+        kernel = params["kernel"]
+        if type(kernel).__name__ == "CompressedKernel":
+            # compressed storage (serving): int codes + bf16 group scales,
+            # dequantized lazily — XLA fuses into the matmul operand read.
+            from repro.models.serving_transforms import decompress_kernel
+
+            kernel = decompress_kernel(kernel, dtype=self.dtype)
+        if "smooth" in params:  # SmoothQuant runtime-divide form
+            x = x / params["smooth"].astype(x.dtype)
+        in_alpha = None if q is None else q.get("in_alpha")
+        y = qmatmul(
+            x,
+            kernel,
+            policy,
+            site=self.name,
+            in_alpha=in_alpha,
+            compute_dtype=jnp.dtype(self.dtype),
+        )
+        y = y.astype(jnp.dtype(self.dtype))
+        if self.use_bias:
+            y = y + params["bias"].astype(y.dtype)
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Embed:
+    """Token embedding (+ optional tied readout).
+
+    ``vocab`` here is the *padded* vocab (multiple of 256); logits for padded
+    ids are masked to -inf by the model head.
+    """
+
+    vocab: int
+    dim: int
+    param_dtype: str = "float32"
+    dtype: str = "float32"
+    name: str = "embed"
+
+    def init(self, key) -> dict:
+        # 0.02 std (GPT-2/OPT convention): with tied readout a std-1 table
+        # would put init logits at ~sqrt(d) scale and CE ~10x ln(V).
+        return {
+            "table": Box(
+                truncated_normal(
+                    key, (self.vocab, self.dim), jnp.dtype(self.param_dtype),
+                    0.02,
+                ),
+                ("vocab", "embed"),
+            )
+        }
+
+    def apply(self, params: dict, ids: jnp.ndarray) -> jnp.ndarray:
+        table = params["table"]
+        y = jnp.take(table, ids, axis=0).astype(jnp.dtype(self.dtype))
+        return shd.constrain(y, ("batch", "seq_res", "embed"))
+
+    def attend(
+        self, params: dict, x: jnp.ndarray, policy: QuantPolicy
+    ) -> jnp.ndarray:
+        """Tied-readout logits: x @ table.T (quantized like any linear)."""
+        table = params["table"]
+        y = qmatmul(
+            x,
+            jnp.swapaxes(table, 0, 1),
+            policy,
+            site=self.name + "/attend",
+            compute_dtype=jnp.dtype(self.dtype),
+        )
+        return shd.constrain(
+            y.astype(jnp.dtype(self.dtype)), ("batch", "seq", "vocab")
+        )

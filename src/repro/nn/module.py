@@ -1,0 +1,95 @@
+"""Minimal functional module system.
+
+A parameter is a ``Box(value, axes)`` — the array plus its *logical* axis
+names (one per dim).  Layer ``init`` functions return trees of Boxes; models
+split them into a value tree (what jit sees) and an axes tree (what the
+sharding layer consumes).  ``axes`` is pytree aux-data so vmap/scan stacking
+works transparently: ``stack_init`` vmaps an init over layer keys and
+prepends the 'layers' axis name.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class Box:
+    """Array + logical axis names (aux data, invisible to transforms)."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: tuple):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Box(shape={shape}, axes={self.axes})"
+
+
+def is_box(x) -> bool:
+    return isinstance(x, Box)
+
+
+def unbox(tree):
+    """Box tree -> raw value tree (for jit arguments)."""
+    return jax.tree_util.tree_map(
+        lambda b: b.value if is_box(b) else b, tree, is_leaf=is_box
+    )
+
+
+def axes_of(tree):
+    """Box tree -> logical-axes tree (same structure, tuples at leaves)."""
+    return jax.tree_util.tree_map(
+        lambda b: b.axes if is_box(b) else None, tree, is_leaf=is_box
+    )
+
+
+def boxify(values, axes):
+    """Re-attach axes metadata to a value tree (after init under jit)."""
+    return jax.tree_util.tree_map(
+        lambda v, a: Box(v, a) if a is not None else v, values, axes,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def stack_init(init_fn: Callable, key: jax.Array, n: int):
+    """vmap ``init_fn(key)`` over ``n`` split keys; prepend 'layers' axis."""
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(init_fn)(keys)
+
+    def add_layer_axis(b):
+        if is_box(b):
+            return Box(b.value, ("layers",) + b.axes)
+        return b
+
+    return jax.tree_util.tree_map(add_layer_axis, stacked, is_leaf=is_box)
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(unbox(tree))
+    return int(sum(x.size for x in leaves))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def truncated_normal(key, shape, dtype, stddev: float = 0.02):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(
+        dtype
+    )

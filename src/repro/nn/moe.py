@@ -1,0 +1,163 @@
+"""Mixture-of-Experts FFN: GShard/Switch-style top-k einsum dispatch.
+
+Tokens are bucketed into groups (static shapes), routed top-k with a
+capacity factor, dispatched to experts via one-hot einsums (GSPMD turns the
+expert-sharded einsums into all-to-alls), processed by per-expert gated
+FFNs, and combined with router weights.  Expert weights are 2-D sharded:
+experts over 'model', expert-hidden over 'data' (fits Llama4-Scout's ~96B
+expert params; see DESIGN.md §4).
+
+The expert matmuls go through the same INT-FP-QSim QDQ hooks as Dense: ABFP
+groups run along each expert's contraction dim (batched over the expert dim).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.core.simulate import qdq_activation, qdq_weight
+from repro.dist import sharding as shd
+from repro.nn.ffn import _ACTS, GATED
+from repro.nn.module import Box, truncated_normal
+
+
+@dataclasses.dataclass(frozen=True)
+class MoE:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    group_tokens: int = 1024  # routing group size (static dispatch shapes)
+    act: str = "swiglu"
+    router_noise: float = 0.0
+    param_dtype: str = "float32"
+    dtype: str = "float32"
+    name: str = "moe"
+
+    @property
+    def gated(self) -> bool:
+        return self.act in GATED
+
+    def init(self, key) -> dict:
+        kr, ki, kg, ko = jax.random.split(key, 4)
+        pdt = jnp.dtype(self.param_dtype)
+        E, D, F = self.n_experts, self.d_model, self.d_ff
+        p = {
+            "router": Box(
+                truncated_normal(kr, (D, E), pdt, D**-0.5),
+                ("embed", "experts"),
+            ),
+            "wi": Box(
+                truncated_normal(ki, (E, D, F), pdt, D**-0.5),
+                ("experts", "embed", "moe_mlp"),
+            ),
+            "wo": Box(
+                truncated_normal(ko, (E, F, D), pdt, F**-0.5),
+                ("experts", "moe_mlp", "embed"),
+            ),
+        }
+        if self.gated:
+            p["wg"] = Box(
+                truncated_normal(kg, (E, D, F), pdt, D**-0.5),
+                ("experts", "embed", "moe_mlp"),
+            )
+        return p
+
+    def capacity(self, tokens_per_group: int) -> int:
+        c = int(
+            tokens_per_group * self.top_k * self.capacity_factor
+            / self.n_experts
+        )
+        return max(c, 4)
+
+    def apply(
+        self, params: dict, x: jnp.ndarray, policy: QuantPolicy,
+        q: dict | None = None,
+    ) -> tuple[jnp.ndarray, dict]:
+        """Returns (output, metrics) — metrics carries the aux load loss."""
+        B, S, D = x.shape
+        E, K = self.n_experts, self.top_k
+        T = min(self.group_tokens, B * S)
+        assert (B * S) % T == 0, (B, S, T)
+        G = B * S // T
+        C = self.capacity(T)
+        xg = x.reshape(G, T, D)
+        xg = shd.constrain(xg, ("batch", None, "embed"))
+
+        # --- routing ---------------------------------------------------
+        logits = jnp.einsum(
+            "gtd,de->gte", xg.astype(jnp.float32),
+            params["router"].astype(jnp.float32),
+        )
+        probs = jax.nn.softmax(logits, axis=-1)  # (G, T, E)
+
+        # top-k selection, GShard-style sequential capacity assignment
+        gates = jnp.zeros_like(probs)
+        dispatch = jnp.zeros((G, T, E, C), self.dtype_np())
+        combine = jnp.zeros((G, T, E, C), jnp.float32)
+        remaining = probs
+        # Track how many tokens each expert has accepted so far (per group).
+        fill = jnp.zeros((G, E), jnp.int32)
+        for _ in range(K):
+            idx = jnp.argmax(remaining, axis=-1)  # (G, T)
+            onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (G,T,E)
+            gate = (probs * onehot).sum(-1)  # (G, T)
+            # position of each token within its chosen expert's buffer
+            pos_in_e = jnp.cumsum(onehot, axis=1) - onehot + fill[:, None, :]
+            pos = (pos_in_e * onehot).sum(-1).astype(jnp.int32)  # (G,T)
+            keep = pos < C
+            poh = jax.nn.one_hot(pos, C, dtype=jnp.float32)  # (G,T,C)
+            d = onehot[..., None] * poh[:, :, None, :]  # (G,T,E,C)
+            d = d * keep[:, :, None, None]
+            dispatch = dispatch + d.astype(dispatch.dtype)
+            combine = combine + d * gate[:, :, None, None]
+            gates = gates + onehot * gate[..., None]
+            fill = fill + (onehot * keep[..., None]).sum(axis=1).astype(
+                jnp.int32
+            )
+            remaining = remaining * (1.0 - onehot)
+
+        # --- aux load-balancing loss (Switch) ---------------------------
+        density = (dispatch.sum(-1) > 0).astype(jnp.float32).mean(axis=1)
+        router_prob_per_e = probs.mean(axis=1)
+        aux_loss = (density * router_prob_per_e).mean() * E * E
+
+        # --- dispatch -> expert FFN -> combine ---------------------------
+        xin = jnp.einsum("gtec,gtd->gecd", dispatch.astype(jnp.float32),
+                         xg.astype(jnp.float32)).astype(x.dtype)
+        xin = shd.constrain(xin, (None, "experts", None, "embed"))
+        xin_q = qdq_activation(xin, policy.input if policy.enabled else None,
+                               axis=-1, site=self.name + "/in")
+
+        def expert_mm(h, w, spec):
+            wq = qdq_weight(w, policy.weight if policy.enabled else None,
+                            contract_axis=1)
+            return jnp.einsum(spec, h.astype(jnp.float32),
+                              wq.astype(jnp.float32))
+
+        hi = expert_mm(xin_q, params["wi"], "gecd,edf->gecf")
+        if self.gated:
+            hg = expert_mm(xin_q, params["wg"], "gecd,edf->gecf")
+            h = _ACTS[GATED[self.act]](hg) * hi
+        else:
+            h = _ACTS[self.act](hi)
+        h = shd.constrain(h, (None, "experts", None, "moe_mlp"))
+        h = h.astype(x.dtype)
+        h_q = qdq_activation(h, policy.input if policy.enabled else None,
+                             axis=-1, site=self.name + "/mid")
+        eout = expert_mm(h_q, params["wo"], "gecf,efd->gecd")
+        eout = shd.constrain(eout, (None, "experts", None, "embed"))
+
+        y = jnp.einsum("gtec,gecd->gtd", combine, eout)
+        y = y.reshape(B, S, D).astype(jnp.dtype(self.dtype))
+        y = shd.constrain(y, ("batch", "seq_res", "embed"))
+        metrics = {"moe_aux_loss": aux_loss}
+        return y, metrics
+
+    def dtype_np(self):
+        return jnp.dtype(self.dtype)

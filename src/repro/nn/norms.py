@@ -1,0 +1,83 @@
+"""RMSNorm / LayerNorm (fp32 statistics, cast back to activation dtype)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Box
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm:
+    dim: int
+    eps: float = 1e-6
+    plus_one: bool = False  # gemma convention: scale = (1 + w)
+    param_dtype: str = "float32"
+    dtype: str = "float32"
+
+    def init(self, key) -> dict:
+        del key
+        init = jnp.zeros if self.plus_one else jnp.ones
+        return {"scale": Box(init((self.dim,), jnp.dtype(self.param_dtype)),
+                             ("embed",))}
+
+    def apply(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + self.eps)
+        scale = params["scale"].astype(jnp.float32)
+        if self.plus_one:
+            scale = 1.0 + scale
+        return (y * scale).astype(jnp.dtype(self.dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm:
+    dim: int
+    eps: float = 1e-5
+    param_dtype: str = "float32"
+    dtype: str = "float32"
+
+    def init(self, key) -> dict:
+        del key
+        pdt = jnp.dtype(self.param_dtype)
+        return {
+            "scale": Box(jnp.ones((self.dim,), pdt), ("embed",)),
+            "bias": Box(jnp.zeros((self.dim,), pdt), ("embed",)),
+        }
+
+    def apply(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        xf = x.astype(jnp.float32)
+        mean = xf.mean(axis=-1, keepdims=True)
+        var = ((xf - mean) ** 2).mean(axis=-1, keepdims=True)
+        y = (xf - mean) * (var + self.eps) ** -0.5
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32
+        )
+        return y.astype(jnp.dtype(self.dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNormGated:
+    """Mamba2's gated RMSNorm: norm(x * silu(z))."""
+
+    dim: int
+    eps: float = 1e-6
+    param_dtype: str = "float32"
+    dtype: str = "float32"
+
+    def init(self, key) -> dict:
+        del key
+        return {"scale": Box(jnp.ones((self.dim,), jnp.dtype(self.param_dtype)),
+                             ("ssm_inner",))}
+
+    def apply(self, params: dict, x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+        xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * (var + self.eps) ** -0.5
+        return (y * params["scale"].astype(jnp.float32)).astype(
+            jnp.dtype(self.dtype)
+        )

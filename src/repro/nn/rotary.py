@@ -1,0 +1,25 @@
+"""Rotary position embeddings (RoPE), half-rotation convention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)  # (head_dim/2,)
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0
+) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]  # (..., S, 1, D/2) — broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

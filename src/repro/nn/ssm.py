@@ -1,0 +1,300 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD: intra-chunk quadratic term + inter-chunk state recurrence
+(lax.scan over chunks).  Projections route through the INT-FP-QSim QDQ
+chokepoint; the state recurrence itself stays in fp32 (it is not a GEMM —
+see DESIGN.md §5 Arch-applicability).
+
+Decode carries (conv_state, ssm_state): the 'KV cache' of an SSM is O(1) in
+sequence length, which is what makes the long_500k cell tractable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.dist import sharding as shd
+from repro.nn.linear import Dense
+from repro.nn.module import Box
+from repro.nn.norms import RMSNormGated
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray  # (B, d_conv-1, conv_channels)
+    state: jnp.ndarray  # (B, H, P, N)
+
+
+def _segsum_exp(dA_cum: jnp.ndarray) -> jnp.ndarray:
+    """L[i, j] = exp(cum_i - cum_j) for i >= j else 0.  dA_cum: (..., Q, H)."""
+    ci = dA_cum[..., :, None, :]
+    cj = dA_cum[..., None, :, :]
+    diff = ci - cj
+    q = dA_cum.shape[-2]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(tri[..., None], jnp.exp(diff), 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+    param_dtype: str = "float32"
+    dtype: str = "float32"
+    name: str = "mamba"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def proj_out(self) -> int:
+        # [z, x, B, C, dt]
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+    def _in_proj(self):
+        return Dense(
+            self.d_model, self.proj_out, in_axis="embed", out_axis="ssm_inner",
+            param_dtype=self.param_dtype, dtype=self.dtype,
+            name=f"{self.name}/in_proj",
+        )
+
+    def _out_proj(self):
+        return Dense(
+            self.d_inner, self.d_model, in_axis="ssm_inner", out_axis="embed",
+            param_dtype=self.param_dtype, dtype=self.dtype,
+            name=f"{self.name}/out_proj",
+        )
+
+    def init(self, key) -> dict:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        pdt = jnp.dtype(self.param_dtype)
+        H = self.n_heads
+        p = {
+            "in_proj": self._in_proj().init(k1),
+            "out_proj": self._out_proj().init(k2),
+            "conv_w": Box(
+                jax.random.normal(k3, (self.d_conv, self.conv_channels), pdt)
+                * (self.d_conv**-0.5),
+                ("conv_dim", "ssm_inner"),
+            ),
+            "conv_b": Box(jnp.zeros((self.conv_channels,), pdt),
+                          ("ssm_inner",)),
+            "A_log": Box(
+                jnp.log(
+                    jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+                ).astype(pdt),
+                ("ssm_heads",),
+            ),
+            "D": Box(jnp.ones((H,), pdt), ("ssm_heads",)),
+            "dt_bias": Box(
+                jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))).astype(
+                    pdt
+                ),
+                ("ssm_heads",),
+            ),
+            "norm": RMSNormGated(
+                self.d_inner, param_dtype=self.param_dtype, dtype=self.dtype
+            ).init(k4),
+        }
+        return p
+
+    # ------------------------------------------------------------ internals
+    def _split_proj(self, zxbcdt):
+        di, gn, H = self.d_inner, self.n_groups * self.d_state, self.n_heads
+        z = zxbcdt[..., :di]
+        xbc = zxbcdt[..., di : di + self.conv_channels]
+        dt = zxbcdt[..., di + self.conv_channels :]
+        assert dt.shape[-1] == H
+        return z, xbc, dt
+
+    def _conv(self, xbc, params):
+        """Causal depthwise conv width d_conv over (B, S, C)."""
+        w = params["conv_w"].astype(jnp.float32)  # (K, C)
+        pad = self.d_conv - 1
+        xp = jnp.pad(xbc.astype(jnp.float32), ((0, 0), (pad, 0), (0, 0)))
+        out = sum(
+            xp[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+            for i in range(self.d_conv)
+        )
+        return jax.nn.silu(out + params["conv_b"].astype(jnp.float32))
+
+    def _ssd(self, x, dt, B_, C_, A, state0=None):
+        """Chunked SSD. x:(B,S,H,P) dt:(B,S,H) B_/C_:(B,S,G,N) A:(H,).
+
+        Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+        Bb, S, H, P = x.shape
+        G, N = B_.shape[-2], B_.shape[-1]
+        Q = min(self.chunk, S)
+        pad = (-S) % Q
+        if pad:
+            # Padded steps carry dt=0: decay=exp(0)=1 and zero input
+            # contribution, so the final state is unaffected.
+            zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                                     [(0, 0)] * (a.ndim - 2))
+            x, dt, B_, C_ = zpad(x), zpad(dt), zpad(B_), zpad(C_)
+        S_p = S + pad
+        nc = S_p // Q
+        rep = H // G
+        Bh = jnp.repeat(B_, rep, axis=2)  # (B,S,H,N)
+        Ch = jnp.repeat(C_, rep, axis=2)
+
+        xc = x.reshape(Bb, nc, Q, H, P).astype(jnp.float32)
+        dtc = dt.reshape(Bb, nc, Q, H).astype(jnp.float32)
+        Bc = Bh.reshape(Bb, nc, Q, H, N).astype(jnp.float32)
+        Cc = Ch.reshape(Bb, nc, Q, H, N).astype(jnp.float32)
+
+        dA = dtc * A[None, None, None, :]  # (B,nc,Q,H)
+        cs = jnp.cumsum(dA, axis=2)
+        L = _segsum_exp(cs)  # (B,nc,Q,Q,H)
+        scores = jnp.einsum("bcqhn,bckhn->bcqkh", Cc, Bc)
+        xdt = xc * dtc[..., None]  # (B,nc,Q,H,P)
+        y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores * L, xdt)
+
+        # chunk states: sum_j B_j ⊗ xdt_j * exp(cs_last - cs_j)
+        decay_out = jnp.exp(cs[:, :, -1:, :] - cs)  # (B,nc,Q,H)
+        chunk_state = jnp.einsum(
+            "bcqhn,bcqhp,bcqh->bchpn", Bc, xdt, decay_out
+        )
+        chunk_decay = jnp.exp(cs[:, :, -1, :])  # (B,nc,H)
+
+        def step(s, inp):
+            cstate, cdecay = inp
+            s_new = s * cdecay[:, :, None, None] + cstate
+            return s_new, s  # emit state *before* this chunk
+
+        s0 = (
+            jnp.zeros((Bb, H, P, N), jnp.float32)
+            if state0 is None
+            else state0.astype(jnp.float32)
+        )
+        final, prev_states = jax.lax.scan(
+            step,
+            s0,
+            (chunk_state.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+        )
+        prev_states = prev_states.swapaxes(0, 1)  # (B,nc,H,P,N)
+        y_inter = jnp.einsum(
+            "bcqhn,bchpn,bcqh->bcqhp", Cc, prev_states, jnp.exp(cs)
+        )
+        y = (y_intra + y_inter).reshape(Bb, S_p, H, P)
+        if pad:
+            y = y[:, :S]
+        return y, final
+
+    # ------------------------------------------------------------- forward
+    def apply(
+        self, params: dict, x: jnp.ndarray, policy: QuantPolicy,
+        q: dict | None = None, return_cache: bool = False,
+    ) -> jnp.ndarray:
+        B, S, _ = x.shape
+        H, P = self.n_heads, self.head_dim
+        G, N = self.n_groups, self.d_state
+        getq = (lambda k: None) if q is None else q.get
+        zxbcdt = self._in_proj().apply(params["in_proj"], x, policy,
+                                       q=getq("in_proj"))
+        z, xbc, dt = self._split_proj(zxbcdt)
+        xbc_raw = zxbcdt[..., self.d_inner : self.d_inner + self.conv_channels]
+        xbc = self._conv(xbc, params)
+        xs = xbc[..., : self.d_inner].reshape(B, S, H, P)
+        B_ = xbc[..., self.d_inner : self.d_inner + G * N].reshape(B, S, G, N)
+        C_ = xbc[..., self.d_inner + G * N :].reshape(B, S, G, N)
+        dt = jax.nn.softplus(
+            dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+        )
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))
+        xs = shd.constrain(xs, ("batch", "seq", "ssm_heads", None))
+        y, final_state = self._ssd(xs, dt, B_, C_, A)
+        y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xs
+        y = y.reshape(B, S, self.d_inner)
+        y = RMSNormGated(
+            self.d_inner, param_dtype=self.param_dtype, dtype=self.dtype
+        ).apply(params["norm"], y, z)
+        out = self._out_proj().apply(params["out_proj"], y, policy,
+                                     q=getq("out_proj"))
+        out = shd.constrain(out, ("batch", "seq_res", "embed"))
+        if return_cache:
+            kc = self.d_conv - 1
+            tail = xbc_raw[:, -kc:, :] if S >= kc else jnp.pad(
+                xbc_raw, ((0, 0), (kc - S, 0), (0, 0))
+            )
+            cache = SSMCache(conv=tail.astype(jnp.dtype(self.dtype)),
+                             state=final_state)
+            return out, cache
+        return out
+
+    # -------------------------------------------------------------- decode
+    def init_cache(self, batch: int, dtype=None) -> SSMCache:
+        dt = jnp.dtype(dtype or self.dtype)
+        return SSMCache(
+            conv=jnp.zeros((batch, self.d_conv - 1, self.conv_channels), dt),
+            state=jnp.zeros(
+                (batch, self.n_heads, self.head_dim, self.d_state),
+                jnp.float32,
+            ),
+        )
+
+    def decode_step(
+        self, params: dict, x: jnp.ndarray, cache: SSMCache, *,
+        policy: QuantPolicy, q: dict | None = None,
+    ) -> tuple[jnp.ndarray, SSMCache]:
+        """x: (B, 1, d_model) -> (y (B,1,d_model), cache')."""
+        B = x.shape[0]
+        H, P, G, N = self.n_heads, self.head_dim, self.n_groups, self.d_state
+        getq = (lambda k: None) if q is None else q.get
+        zxbcdt = self._in_proj().apply(params["in_proj"], x, policy,
+                                       q=getq("in_proj"))
+        z, xbc, dt = self._split_proj(zxbcdt)  # (B,1,*)
+        # conv via cached window
+        win = jnp.concatenate([cache.conv.astype(jnp.float32),
+                               xbc.astype(jnp.float32)], axis=1)
+        w = params["conv_w"].astype(jnp.float32)
+        conv_out = jnp.einsum("bkc,kc->bc", win, w) + params["conv_b"].astype(
+            jnp.float32
+        )
+        xbc_t = jax.nn.silu(conv_out)[:, None, :]  # (B,1,C)
+        new_conv = win[:, 1:, :].astype(cache.conv.dtype)
+
+        xs = xbc_t[..., : self.d_inner].reshape(B, H, P)
+        B_ = xbc_t[..., self.d_inner : self.d_inner + G * N].reshape(B, G, N)
+        C_ = xbc_t[..., self.d_inner + G * N :].reshape(B, G, N)
+        rep = H // G
+        Bh = jnp.repeat(B_, rep, axis=1)  # (B,H,N)
+        Ch = jnp.repeat(C_, rep, axis=1)
+        dtv = jax.nn.softplus(
+            dt[:, 0, :].astype(jnp.float32)
+            + params["dt_bias"].astype(jnp.float32)
+        )  # (B,H)
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))
+        decay = jnp.exp(dtv * A[None, :])  # (B,H)
+        state = cache.state.astype(jnp.float32)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtv, xs.astype(jnp.float32), Bh
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+        y = y + params["D"].astype(jnp.float32)[None, :, None] * xs
+        y = y.reshape(B, 1, self.d_inner)
+        y = RMSNormGated(
+            self.d_inner, param_dtype=self.param_dtype, dtype=self.dtype
+        ).apply(params["norm"], y, z)
+        out = self._out_proj().apply(params["out_proj"], y, policy,
+                                     q=getq("out_proj"))
+        out = shd.constrain(out, ("batch", "seq_res", "embed"))
+        return out, SSMCache(conv=new_conv, state=state)

@@ -1,0 +1,8 @@
+"""Optimizers: AdamW with fp32 moments, global-norm clip, schedules,
+gradient compression for cross-pod reduction."""
+
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.schedule import warmup_cosine
+from repro.optim.clip import clip_by_global_norm
+
+__all__ = ["AdamW", "AdamWState", "warmup_cosine", "clip_by_global_norm"]

@@ -1,0 +1,66 @@
+"""AdamW, hand-rolled (no optax offline): fp32 moments over any param dtype.
+
+Moments optionally take ZeRO-1-style extra sharding over the 'data' axis
+(see repro.dist.zero1) — the update's all-gather is GSPMD-inserted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params) -> AdamWState:
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            mu=jax.tree_util.tree_map(zeros32, params),
+            nu=jax.tree_util.tree_map(zeros32, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, grads, state: AdamWState, params) -> tuple[Any, AdamWState]:
+        count = state.count + 1
+        b1, b2 = self.b1, self.b2
+        lr = self.lr(count) if callable(self.lr) else self.lr
+
+        def upd(g, mu, nu, p):
+            g32 = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * g32 * g32
+            mu_hat = mu / (1 - b1 ** count.astype(jnp.float32))
+            nu_hat = nu / (1 - b2 ** count.astype(jnp.float32))
+            step = mu_hat / (jnp.sqrt(nu_hat) + self.eps)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), mu, nu
+
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdamWState(mu=mu, nu=nu, count=count)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)

@@ -1,0 +1,46 @@
+"""Gradient compression for the slow cross-pod hop (beyond-paper,
+using the paper's own int8 machinery): int8 quantize + error feedback.
+
+Inside a pjit'd step the cross-pod all-reduce is GSPMD-inserted; to compress
+it we do the reduction *explicitly* under shard_map over the 'pod' axis:
+each pod quantizes its local (already data-reduced) gradient to int8 with a
+per-tensor scale, psums codes in int32, dequantizes, and keeps the residual
+as error-feedback state for the next step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.formats import INT8
+from repro.core.quantize import dequantize, quantize
+
+
+def compressed_psum_pod(grads, errors, mesh):
+    """All-reduce ``grads`` over the 'pod' axis with int8 error feedback.
+
+    grads/errors: pytrees replicated over 'pod' at call time inside
+    shard_map.  Returns (reduced_grads, new_errors).
+    """
+    npods = mesh.shape["pod"]
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        # Shared scale: codes are summed ACROSS pods, so every pod must
+        # quantize against the same alpha (pmax), else code sums mix units.
+        alpha_local = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-8)
+        alpha = jax.lax.pmax(alpha_local, "pod")
+        codes, scale = quantize(g32, alpha, INT8)
+        summed = jax.lax.psum(codes.astype(jnp.int32), "pod")
+        out = dequantize(summed, scale) / npods
+        new_e = g32 - dequantize(codes, scale)
+        return out.astype(g.dtype), new_e
+
+    flat_g, tree = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(errors)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    red = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
+    errs = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
+    return red, errs

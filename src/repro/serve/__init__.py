@@ -1,0 +1,1 @@
+"""Serving: prefill/decode step factories, KV-cache, batch engine."""

@@ -1,0 +1,40 @@
+"""Serving step factories (prefill / decode), pjit-friendly."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+
+
+def make_prefill_step(model, policy: QuantPolicy = QuantPolicy(),
+                      max_len: int | None = None) -> Callable:
+    def prefill_step(params, batch):
+        logits, state = model.prefill(params, batch, policy, max_len=max_len)
+        return logits, state
+
+    return prefill_step
+
+
+def make_decode_step(model, policy: QuantPolicy = QuantPolicy()) -> Callable:
+    def decode_step(params, token, state):
+        logits, state = model.decode_step(params, token, state, policy)
+        return logits, state
+
+    return decode_step
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+
+def sample_with_temperature(logits, key, temperature: float = 1.0):
+    if temperature <= 0:
+        return greedy_sample(logits)
+    g = jax.random.gumbel(key, logits.shape)
+    return jnp.argmax(logits / temperature + g, axis=-1).astype(jnp.int32)[
+        :, None
+    ]

@@ -1,0 +1,1 @@
+"""Training: step factory, loop, microbatching, fault-tolerance hooks."""

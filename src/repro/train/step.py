@@ -1,0 +1,83 @@
+"""train_step factory: loss -> grads (microbatched) -> clip -> AdamW.
+
+The returned function is pure and pjit-friendly; all sharding comes from the
+in/out shardings assigned by the launcher plus the logical constraints inside
+the model (repro.dist.sharding.use_rules context).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.optim.adamw import AdamW, AdamWState, apply_updates
+from repro.optim.clip import clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    max_grad_norm: float = 1.0
+
+
+def make_train_step(
+    model,
+    optimizer: AdamW,
+    policy: QuantPolicy = QuantPolicy(),
+    cfg: TrainStepConfig = TrainStepConfig(),
+) -> Callable:
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, policy)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if cfg.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            b = x.shape[0]
+            assert b % cfg.microbatches == 0, (b, cfg.microbatches)
+            return x.reshape(cfg.microbatches, b // cfg.microbatches,
+                             *x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            grads_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(a.dtype), grads_acc, grads
+            )
+            return (loss_acc + loss, grads_acc), metrics
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (loss_sum, grads), metrics = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), micro
+        )
+        n = cfg.microbatches
+        grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        return loss_sum / n, metrics, grads
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        out_metrics = {
+            "loss": loss.astype(jnp.float32),
+            "grad_norm": gnorm,
+            **{k: v.astype(jnp.float32) for k, v in metrics.items()},
+        }
+        return params, opt_state, out_metrics
+
+    return train_step

@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: never set XLA_FLAGS device-count here — smoke
+tests and benches must see the real single CPU device (the dry-run sets its
+own flag in its own process)."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,138 @@
+"""ABFP (paper eqn (4)): per-vector max scaling over groups of n."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.abfp import abfp_qdq, abfp_quantize, abfp_scales
+from repro.core.formats import FP4_E1M2, FP8_E4M3, INT4, INT8
+
+
+def test_scales_are_group_max():
+    x = jnp.arange(24, dtype=jnp.float32).reshape(2, 12)
+    s = abfp_scales(x, axis=-1, n=4, scale_dtype=jnp.float32)
+    expect = np.abs(np.asarray(x)).reshape(2, 3, 4).max(-1)
+    np.testing.assert_allclose(np.asarray(s), expect)
+
+
+def test_scales_bf16_rounding():
+    # scale gets rounded to bf16 — value representable in bf16 is exact
+    x = jnp.full((1, 64), 3.140625)  # bf16-exact
+    s = abfp_scales(x, n=64)
+    assert float(s[0, 0]) == 3.140625
+
+
+def test_qdq_error_bound_int4():
+    """Per-group error <= group_scale / (2 * qmax) + bf16 slack."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(8, 128) * 3, jnp.float32)
+    y = abfp_qdq(x, INT4, axis=-1, n=64)
+    gmax = np.abs(np.asarray(x)).reshape(8, 2, 64).max(-1, keepdims=True)
+    err = np.abs(np.asarray(y - x)).reshape(8, 2, 64)
+    bound = gmax / (2 * 7) * 1.01 + 1e-6  # 1% bf16 scale slack
+    assert (err <= bound).all()
+
+
+def test_qdq_outlier_isolation():
+    """The paper's key ABFP property: an outlier only damages its own
+    group of n, unlike per-tensor max scaling."""
+    x = np.ones((1, 128), np.float32) * 0.1
+    x[0, 0] = 100.0  # outlier in group 0
+    y = np.asarray(abfp_qdq(jnp.asarray(x), INT4, n=64))
+    # group 1 (cols 64..128) is untouched by the outlier
+    np.testing.assert_allclose(y[0, 64:], x[0, 64:], rtol=0.1)
+    # per-tensor max scaling would zero the 0.1s: step=100/7=14.3
+    # here group 1's step is 0.1/7
+    assert np.abs(y[0, 64:] - 0.1).max() < 0.01
+
+
+def test_qdq_axis0():
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(128, 6), jnp.float32)
+    y0 = abfp_qdq(x, INT8, axis=0, n=64)
+    yt = abfp_qdq(x.T, INT8, axis=-1, n=64).T
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(yt), rtol=1e-6)
+
+
+def test_qdq_padding_when_k_not_multiple():
+    x = jnp.asarray(np.random.RandomState(2).randn(4, 100), jnp.float32)
+    y = abfp_qdq(x, INT8, axis=-1, n=64)  # 100 = 64 + 36 (padded group)
+    assert y.shape == x.shape
+    # error bound still holds per (conceptual) group
+    assert float(jnp.abs(y - x).max()) < float(jnp.abs(x).max()) / 100
+
+
+def test_qdq_idempotent():
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(4, 128), jnp.float32)
+    once = abfp_qdq(x, INT4, n=64)
+    twice = abfp_qdq(once, INT4, n=64)
+    # idempotence up to bf16 re-rounding of the (changed) max
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               rtol=1e-2, atol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", [INT4, INT8, FP4_E1M2, FP8_E4M3])
+@pytest.mark.parametrize("n", [64, 128])
+def test_qdq_formats_and_vector_lengths(fmt, n):
+    rng = np.random.RandomState(4)
+    x = jnp.asarray(rng.randn(4, 256), jnp.float32)
+    y = abfp_qdq(x, fmt, n=n)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    # correlation with input stays high even at 4 bits
+    c = np.corrcoef(np.asarray(x).ravel(), np.asarray(y).ravel())[0, 1]
+    assert c > 0.95
+
+
+def test_smaller_n_lower_error():
+    """Paper Fig 3: smaller vector length n -> finer scales -> lower error."""
+    rng = np.random.RandomState(5)
+    # heavy-tailed activations (the LLM outlier regime)
+    x = jnp.asarray(rng.standard_t(2, size=(16, 512)), jnp.float32)
+    e64 = float(jnp.mean((abfp_qdq(x, INT4, n=64) - x) ** 2))
+    e128 = float(jnp.mean((abfp_qdq(x, INT4, n=128) - x) ** 2))
+    e512 = float(jnp.mean((abfp_qdq(x, INT4, n=512) - x) ** 2))
+    assert e64 <= e128 <= e512
+
+
+def test_quantize_codes_and_scales():
+    rng = np.random.RandomState(6)
+    x = jnp.asarray(rng.randn(2, 128), jnp.float32)
+    codes, scales, (pad, k) = abfp_quantize(x, INT8, axis=-1, n=64)
+    assert codes.shape == (2, 2, 64) and codes.dtype == jnp.int8
+    assert scales.shape == (2, 2)
+    # `scales` are UNIT scales (alpha / qmax): x ~ codes * scales
+    rec = np.asarray(codes, np.float32) * np.asarray(scales)[..., None]
+    np.testing.assert_allclose(
+        rec.reshape(2, 128), np.asarray(x),
+        atol=float(scales.max()) * 0.51,
+    )
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=50, deadline=None)
+def test_group_max_preserved_property(seed):
+    """Group max elements survive QDQ within one int step + bf16 slack."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(2, 64) * rng.uniform(0.1, 10), jnp.float32)
+    y = abfp_qdq(x, INT8, n=64)
+    gmax_in = np.abs(np.asarray(x)).max()
+    gmax_out = np.abs(np.asarray(y)).max()
+    assert abs(gmax_in - gmax_out) <= gmax_in * (1 / 127 + 0.01)
+
+
+def test_gradient_with_ste():
+    rng = np.random.RandomState(7)
+    x = jnp.asarray(rng.randn(4, 128), jnp.float32)
+
+    def f(x):
+        return abfp_qdq(x, INT4, n=64, ste=True).sum()
+
+    g = jax.grad(f)(x)
+    # ABFP never clips (scale = group max) except bf16 round-down of the
+    # max itself: gradient is ~all ones
+    assert float(jnp.abs(g).mean()) > 0.95

@@ -1,0 +1,203 @@
+"""Attention: blockwise==reference, GQA, SWA, softcap, decode cache,
+vector-position decode (continuous batching)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import QuantPolicy, preset
+from repro.nn.attention import Attention
+from repro.nn.module import unbox
+
+POL = QuantPolicy()
+
+
+def mk_attn(**kw):
+    base = dict(d_model=64, n_heads=4, n_kv=2, head_dim=16,
+                q_block=16, kv_block=16, blockwise_min_seq=1 << 30)
+    base.update(kw)
+    return Attention(**base)
+
+
+def _pos(B, S):
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+
+def test_blockwise_equals_reference():
+    attn = mk_attn()
+    params = unbox(attn.init(jax.random.PRNGKey(0)))
+    x = jnp.asarray(np.random.RandomState(0).randn(2, 64, 64), jnp.float32)
+    pos = _pos(2, 64)
+    y_ref = attn.apply(params, x, positions=pos, policy=POL)
+    y_blk = mk_attn(blockwise_min_seq=1).apply(
+        params, x, positions=pos, policy=POL)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_blk),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_blockwise_equals_reference_quantized():
+    attn = mk_attn()
+    params = unbox(attn.init(jax.random.PRNGKey(1)))
+    x = jnp.asarray(np.random.RandomState(1).randn(2, 64, 64), jnp.float32)
+    pos = _pos(2, 64)
+    pol = preset("w4a8_abfp")
+    y_ref = attn.apply(params, x, positions=pos, policy=pol)
+    y_blk = mk_attn(blockwise_min_seq=1).apply(
+        params, x, positions=pos, policy=pol)
+    # probs quantize per-block in blockwise (documented deviation) — the
+    # pre-softmax operands quantize identically, so outputs stay close.
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_blk),
+                               rtol=0.05, atol=0.02)
+
+
+def test_causality():
+    attn = mk_attn()
+    params = unbox(attn.init(jax.random.PRNGKey(2)))
+    x = jnp.asarray(np.random.RandomState(2).randn(1, 16, 64), jnp.float32)
+    y1 = attn.apply(params, x, positions=_pos(1, 16), policy=POL)
+    # perturb the future: outputs at earlier positions must not change
+    x2 = x.at[:, 12:, :].add(100.0)
+    y2 = attn.apply(params, x2, positions=_pos(1, 16), policy=POL)
+    np.testing.assert_allclose(np.asarray(y1[:, :12]), np.asarray(y2[:, :12]),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(y1[:, 12:] - y2[:, 12:]).max()) > 1e-3
+
+
+def test_sliding_window_masks_past():
+    attn = mk_attn()
+    params = unbox(attn.init(jax.random.PRNGKey(3)))
+    x = jnp.asarray(np.random.RandomState(3).randn(1, 32, 64), jnp.float32)
+    pos = _pos(1, 32)
+    w4 = attn.apply(params, x, positions=pos, policy=POL,
+                    window=jnp.asarray(4, jnp.int32))
+    # perturbing tokens more than 4 steps in the past must not affect
+    # position 31 under window=4
+    x2 = x.at[:, :20, :].add(50.0)
+    w4b = attn.apply(params, x2, positions=pos, policy=POL,
+                     window=jnp.asarray(4, jnp.int32))
+    np.testing.assert_allclose(np.asarray(w4[:, -1]), np.asarray(w4b[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+    # with a global window it must
+    g = attn.apply(params, x, positions=pos, policy=POL)
+    gb = attn.apply(params, x2, positions=pos, policy=POL)
+    assert float(jnp.abs(g[:, -1] - gb[:, -1]).max()) > 1e-3
+
+
+def test_gqa_heads_share_kv():
+    """n_kv=1 (MQA): all query heads attend to the same single KV head."""
+    attn = mk_attn(n_kv=1)
+    params = unbox(attn.init(jax.random.PRNGKey(4)))
+    x = jnp.asarray(np.random.RandomState(4).randn(1, 8, 64), jnp.float32)
+    y = attn.apply(params, x, positions=_pos(1, 8), policy=POL)
+    assert y.shape == (1, 8, 64)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_softcap_bounds_scores():
+    attn_plain = mk_attn()
+    attn_cap = mk_attn(softcap=5.0)
+    params = unbox(attn_plain.init(jax.random.PRNGKey(5)))
+    x = jnp.asarray(50 * np.random.RandomState(5).randn(1, 8, 64),
+                    jnp.float32)
+    y_p = attn_plain.apply(params, x, positions=_pos(1, 8), policy=POL)
+    y_c = attn_cap.apply(params, x, positions=_pos(1, 8), policy=POL)
+    # softcap changes outputs on large-score inputs
+    assert float(jnp.abs(y_p - y_c).max()) > 1e-4
+
+
+def test_decode_matches_prefill_suffix():
+    """decode_step over a ring cache == full attention, token by token."""
+    attn = mk_attn()
+    params = unbox(attn.init(jax.random.PRNGKey(6)))
+    S = 12
+    x = jnp.asarray(np.random.RandomState(6).randn(1, S, 64), jnp.float32)
+    full = attn.apply(params, x, positions=_pos(1, S), policy=POL)
+
+    cache = attn.init_cache(1, max_len=S, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = attn.decode_step(
+            params, x[:, t:t + 1], cache,
+            position=jnp.asarray(t, jnp.int32), policy=POL)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_decode_ring_buffer_wraps():
+    """cache smaller than the sequence: ring slots + SWA masking still give
+    exact sliding-window attention."""
+    attn = mk_attn()
+    params = unbox(attn.init(jax.random.PRNGKey(7)))
+    S, W = 16, 4
+    x = jnp.asarray(np.random.RandomState(7).randn(1, S, 64), jnp.float32)
+    full = attn.apply(params, x, positions=_pos(1, S), policy=POL,
+                      window=jnp.asarray(W, jnp.int32))
+    cache = attn.init_cache(1, max_len=S, dtype=jnp.float32, window=W)
+    assert cache.k.shape[1] == W  # ring truncated to the window
+    outs = []
+    for t in range(S):
+        y, cache = attn.decode_step(
+            params, x[:, t:t + 1], cache,
+            position=jnp.asarray(t, jnp.int32), policy=POL,
+            window=jnp.asarray(W, jnp.int32))
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_vector_position_decode_equals_scalar():
+    """Per-row positions (continuous batching) == aligned scalar decode
+    when all rows share the position."""
+    attn = mk_attn()
+    params = unbox(attn.init(jax.random.PRNGKey(8)))
+    B, S = 3, 6
+    x = jnp.asarray(np.random.RandomState(8).randn(B, S, 64), jnp.float32)
+    c1 = attn.init_cache(B, max_len=S, dtype=jnp.float32)
+    c2 = attn.init_cache(B, max_len=S, dtype=jnp.float32)
+    for t in range(S):
+        y1, c1 = attn.decode_step(params, x[:, t:t + 1], c1,
+                                  position=jnp.asarray(t, jnp.int32),
+                                  policy=POL)
+        y2, c2 = attn.decode_step(params, x[:, t:t + 1], c2,
+                                  position=jnp.full((B,), t, jnp.int32),
+                                  policy=POL)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c1.k), np.asarray(c2.k),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_vector_position_desynced_rows():
+    """Desynced rows attend only to their own written history."""
+    attn = mk_attn()
+    params = unbox(attn.init(jax.random.PRNGKey(9)))
+    B, T = 2, 8
+    rngx = np.random.RandomState(9)
+    seq = jnp.asarray(rngx.randn(1, T, 64), jnp.float32)
+
+    # Row 0 decodes seq positions 0..7; row 1 (junk-filled) runs behind by 3.
+    # Reference: row-0-only aligned decode.
+    cache_ref = attn.init_cache(1, max_len=T, dtype=jnp.float32)
+    refs = []
+    for t in range(T):
+        y, cache_ref = attn.decode_step(
+            params, seq[:, t:t + 1], cache_ref,
+            position=jnp.asarray(t, jnp.int32), policy=POL)
+        refs.append(y)
+
+    cache = attn.init_cache(B, max_len=T, dtype=jnp.float32)
+    got = []
+    junk = jnp.asarray(rngx.randn(1, 1, 64), jnp.float32)
+    for t in range(T):
+        xt = jnp.concatenate([seq[:, t:t + 1], junk], axis=0)
+        pos = jnp.asarray([t, max(t - 3, 0)], jnp.int32)
+        y, cache = attn.decode_step(params, xt, cache, position=pos,
+                                    policy=POL)
+        got.append(y[:1])
+    for t in range(T):
+        np.testing.assert_allclose(np.asarray(refs[t]), np.asarray(got[t]),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,130 @@
+"""Calibration (paper §II-B1): observers, MSE/max solvers, model taps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.calibration import (
+    Calibrator,
+    RunningStats,
+    max_alpha,
+    mse_alpha,
+    mse_alpha_tensor,
+)
+from repro.core.formats import INT4, INT8
+
+
+def test_running_stats_absmax():
+    st = RunningStats()
+    st.update(np.asarray([[1.0, -2.0], [0.5, 1.5]]))
+    st.update(np.asarray([[-3.0, 0.1]]))
+    assert st.absmax == 3.0
+    np.testing.assert_allclose(st.ch_absmax, [3.0, 2.0])
+    np.testing.assert_allclose(st.ch_min, [-3.0, -2.0])
+    np.testing.assert_allclose(st.ch_max, [1.0, 1.5])
+
+
+def test_running_stats_outer():
+    st = RunningStats(collect_outer=True)
+    x1 = np.random.RandomState(0).randn(16, 4)
+    x2 = np.random.RandomState(1).randn(8, 4)
+    st.update(x1)
+    st.update(x2)
+    want = x1.T @ x1 + x2.T @ x2
+    np.testing.assert_allclose(st.outer, want, rtol=1e-6)
+
+
+def test_max_alpha():
+    st = RunningStats()
+    st.update(np.asarray([[2.0, -4.0]]))
+    assert float(max_alpha(st)) == 4.0
+    np.testing.assert_allclose(np.asarray(max_alpha(st, per_channel=True)),
+                               [2.0, 4.0])
+
+
+def test_mse_alpha_clips_outliers():
+    """With outliers the MSE-optimal clip sits below the max — the very
+    mechanism the paper blames for Table I's collapse (clipping kills the
+    outliers that matter)."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(4096, 8).astype(np.float32)
+    x[0, :] = 10.0  # rare outlier row (mass 8/32768)
+    st = RunningStats(max_samples=64)
+    st.update(x)
+    a_mse = float(np.asarray(mse_alpha(st, INT4)).max())
+    a_max = float(max_alpha(st))
+    assert a_max == pytest.approx(10.0)
+    assert a_mse < 6.0  # clipped well below the outlier
+
+
+def test_mse_alpha_beats_max_on_mse():
+    rng = np.random.RandomState(1)
+    x = np.concatenate(
+        [rng.randn(2048, 4), 50 * rng.randn(8, 4)]
+    ).astype(np.float32)
+    st = RunningStats(max_samples=64)
+    st.update(x)
+    from repro.core.quantize import qdq
+
+    xs = jnp.asarray(np.concatenate(st.samples))
+    for a_name, alpha in (("mse", mse_alpha(st, INT8)),
+                          ("max", max_alpha(st))):
+        err = float(jnp.mean((qdq(xs, alpha, INT8) - xs) ** 2))
+        if a_name == "mse":
+            e_mse = err
+        else:
+            e_max = err
+    assert e_mse <= e_max
+
+
+def test_mse_alpha_tensor_weights():
+    rng = np.random.RandomState(2)
+    w = jnp.asarray(rng.randn(64, 32), jnp.float32)
+    a = mse_alpha_tensor(w, INT4)
+    assert 0 < float(a) <= float(jnp.abs(w).max())
+
+
+def test_calibrator_context():
+    assert Calibrator.active() is None
+    c = Calibrator()
+    with c.observing():
+        assert Calibrator.active() is c
+        Calibrator.active().observe("site_a", jnp.ones((2, 4)))
+    assert Calibrator.active() is None
+    assert "site_a" in c.stats
+    assert c.stats["site_a"].count == 2
+
+
+def test_calibrator_solve_all_sites():
+    c = Calibrator()
+    with c.observing():
+        c.observe("s1", jnp.asarray(np.random.RandomState(0).randn(32, 4)))
+        c.observe("s2", jnp.asarray(np.random.RandomState(1).randn(32, 8)))
+    out = c.solve(INT8, method="mse")
+    assert set(out) == {"s1", "s2"}
+    out_max = c.solve(INT8, method="max")
+    assert set(out_max) == {"s1", "s2"}
+    with pytest.raises(ValueError):
+        c.solve(INT8, method="bogus")
+
+
+def test_model_level_calibration_sites_unique_per_layer():
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.policy import preset
+    from repro.models import build_model
+    from repro.nn.module import unbox
+
+    cfg = get_config("opt-tiny").replace(n_layers=3)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    c = Calibrator()
+    with c.observing():
+        model.apply(params, {"tokens": jnp.ones((1, 8), jnp.int32)},
+                    preset("w4a8_mse"))
+    sites = sorted(c.stats)
+    for i in range(3):
+        assert f"blocks.{i}/attn/q/in" in sites
+        assert f"blocks.{i}/ffn/wi/in" in sites
+        assert f"blocks.{i}/attn/probs" in sites

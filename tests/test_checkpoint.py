@@ -1,0 +1,117 @@
+"""Checkpoint store + manager: atomicity, retention, async, restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+
+
+def _tree(seed=0):
+    rng = np.random.RandomState(seed)
+    return {
+        "a": jnp.asarray(rng.randn(4, 8), jnp.float32),
+        "nested": {"b": jnp.asarray(rng.randn(3), jnp.bfloat16),
+                   "c": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    store.save_pytree(d, 10, t, metadata={"step": 10})
+    store.mark_committed(d, 10)
+    got = store.restore_pytree(d, 10, jax.eval_shape(lambda: t))
+    for k in ("a",):
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(t[k]))
+    assert got["nested"]["b"].dtype == jnp.bfloat16
+    assert int(got["nested"]["c"]) == 7
+    assert store.load_metadata(d, 10)["step"] == 10
+
+
+def test_list_steps_only_committed(tmp_path):
+    d = str(tmp_path)
+    store.save_pytree(d, 1, _tree())
+    store.mark_committed(d, 1)
+    store.save_pytree(d, 2, _tree())  # never committed (simulated crash)
+    assert store.list_steps(d) == [1]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    store.save_pytree(d, 1, _tree())
+    bad = {"a": jnp.zeros((2, 2)), "nested": {"b": jnp.zeros(3, jnp.bfloat16),
+                                              "c": jnp.zeros((), jnp.int32)}}
+    with pytest.raises(ValueError, match="shape"):
+        store.restore_pytree(d, 1, bad)
+
+
+def test_restore_tree_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    store.save_pytree(d, 1, _tree())
+    with pytest.raises(ValueError, match="mismatch"):
+        store.restore_pytree(d, 1, {"different": jnp.zeros(1)})
+
+
+def test_manager_cadence_and_retention(tmp_path):
+    mgr = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path), interval=10, keep=2,
+                         async_write=False)
+    )
+    assert not mgr.should_save(5)
+    assert mgr.should_save(10)
+    for step in (10, 20, 30, 40):
+        mgr.save(step, {"state": _tree(step)})
+    steps = store.list_steps(str(tmp_path))
+    assert steps == [30, 40]  # keep=2
+
+
+def test_manager_async_write(tmp_path):
+    mgr = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path), interval=1, keep=5,
+                         async_write=True)
+    )
+    t = _tree(1)
+    mgr.save(7, {"params": t})
+    mgr.wait()
+    assert mgr.latest_step() == 7
+    got = mgr.restore(7, {"params": jax.eval_shape(lambda: t)})
+    np.testing.assert_array_equal(np.asarray(got["params"]["a"]),
+                                  np.asarray(t["a"]))
+
+
+def test_manager_restores_newest_committed(tmp_path):
+    d = str(tmp_path)
+    mgr = CheckpointManager(CheckpointConfig(directory=d, async_write=False))
+    mgr.save(10, {"state": _tree(0)})
+    mgr.save(20, {"state": _tree(1)})
+    # simulate a crash mid-write of step 30: uncommitted dir
+    store.save_pytree(d, 30, _tree(2))
+    assert mgr.latest_step() == 20
+
+
+def test_snapshot_semantics(tmp_path):
+    """Donated/mutated-after-save params must not corrupt the checkpoint."""
+    mgr = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path), async_write=True)
+    )
+    t = {"w": jnp.ones((4,))}
+    mgr.save(1, {"params": t})
+    t["w"] = t["w"] * 100  # mutate the python dict immediately
+    mgr.wait()
+    got = mgr.restore(1, {"params": {"w": jnp.zeros((4,))}})
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.ones(4))
+
+
+def test_atomic_no_tmp_left_after_commit(tmp_path):
+    d = str(tmp_path)
+    store.save_pytree(d, 5, _tree())
+    store.mark_committed(d, 5)
+    leftovers = [p for p in os.listdir(os.path.join(d, "step_00000005"))
+                 if ".tmp" in p]
+    assert not leftovers

@@ -1,0 +1,133 @@
+"""Fused flash-attention Pallas kernel vs materialized-softmax oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref
+
+
+def _rand(bh, s, t, d, seed=0, dtype=jnp.float32):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(bh, s, d), dtype)
+    k = jnp.asarray(rng.randn(bh, t, d), dtype)
+    v = jnp.asarray(rng.randn(bh, t, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize(
+    "bh,s,d,bq,bk",
+    [
+        (2, 128, 64, 128, 128),   # single block
+        (2, 256, 64, 128, 128),   # 2x2 blocks (causal cross-block)
+        (1, 512, 32, 128, 64),    # rectangular blocks, 4x8 grid
+        (4, 128, 128, 64, 128),   # D=128 MXU lane width
+    ],
+)
+def test_flash_vs_ref_causal(bh, s, d, bq, bk):
+    q, k, v = _rand(bh, s, s, d)
+    got = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    want = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_non_causal():
+    q, k, v = _rand(2, 128, 256, 64, seed=1)
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=128,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_custom_scale():
+    q, k, v = _rand(1, 128, 128, 32, seed=2)
+    got = flash_attention(q, k, v, scale=0.5, block_q=64, block_k=64,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, scale=0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_bf16():
+    q, k, v = _rand(2, 128, 128, 64, seed=3, dtype=jnp.bfloat16)
+    got = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = flash_attention_ref(q, k, v)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+def test_flash_causality_property():
+    """Perturbing future keys/values must not change earlier outputs."""
+    q, k, v = _rand(1, 256, 256, 32, seed=4)
+    base = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    k2 = k.at[:, 200:].add(50.0)
+    v2 = v.at[:, 200:].add(50.0)
+    pert = flash_attention(q, k2, v2, block_q=128, block_k=128,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(base[:, :200]),
+                               np.asarray(pert[:, :200]),
+                               rtol=1e-5, atol=1e-6)
+    assert float(jnp.abs(base[:, 200:] - pert[:, 200:]).max()) > 1e-3
+
+
+def test_flash_quantized_operands_compose():
+    """ABFP-QDQ'd q/k/v through the fused kernel == QDQ then reference —
+    the paper's bmm quantization composes with the flash schedule."""
+    from repro.core.abfp import abfp_qdq
+    from repro.core.formats import INT8
+
+    q, k, v = _rand(2, 128, 128, 64, seed=5)
+    qq = abfp_qdq(q, INT8, axis=-1, n=64)
+    kq = abfp_qdq(k, INT8, axis=-1, n=64)
+    vq = abfp_qdq(v, INT8, axis=1, n=64)
+    got = flash_attention(qq, kq, vq, block_q=64, block_k=64, interpret=True)
+    want = flash_attention_ref(qq, kq, vq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_attention_module_flash_routing():
+    """Attention(use_flash_kernel=True) == reference path (rope + GQA)."""
+    import dataclasses
+
+    from repro.core.policy import QuantPolicy
+    from repro.nn.attention import Attention
+    from repro.nn.module import unbox
+
+    attn = Attention(d_model=64, n_heads=4, n_kv=2, head_dim=16)
+    params = unbox(attn.init(jax.random.PRNGKey(7)))
+    x = jnp.asarray(np.random.RandomState(7).randn(2, 128, 64), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(128, dtype=jnp.int32)[None], (2, 128))
+    ref = attn.apply(params, x, positions=pos, policy=QuantPolicy())
+    fl = dataclasses.replace(attn, use_flash_kernel=True,
+                             q_block=64, kv_block=64)
+    got = fl.apply(params, x, positions=pos, policy=QuantPolicy())
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_attention_flash_falls_back_on_softcap():
+    """softcap (gemma2) is unsupported by the fused kernel: the module must
+    silently keep the jnp path, not mis-compute."""
+    import dataclasses
+
+    from repro.core.policy import QuantPolicy
+    from repro.nn.attention import Attention
+    from repro.nn.module import unbox
+
+    attn = Attention(d_model=64, n_heads=4, n_kv=2, head_dim=16, softcap=5.0)
+    params = unbox(attn.init(jax.random.PRNGKey(8)))
+    x = jnp.asarray(50 * np.random.RandomState(8).randn(1, 64, 64),
+                    jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(64, dtype=jnp.int32)[None], (1, 64))
+    ref = attn.apply(params, x, positions=pos, policy=QuantPolicy())
+    fl = dataclasses.replace(attn, use_flash_kernel=True)
+    got = fl.apply(params, x, positions=pos, policy=QuantPolicy())
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               rtol=1e-6, atol=1e-7)

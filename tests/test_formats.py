@@ -1,0 +1,141 @@
+"""Format semantics: integer eqns (1)-(3) and minifloat grids."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.formats import (
+    BY_NAME,
+    FP4_E1M2,
+    FP4_E2M1,
+    FP8_E4M3,
+    INT4,
+    INT8,
+    FloatFormat,
+    IntFormat,
+    get_format,
+    representable_values,
+)
+
+ALL_FMTS = [INT4, INT8, FP4_E2M1, FP4_E1M2, FP8_E4M3]
+
+
+# ---------------------------------------------------------------- int formats
+def test_int4_range():
+    assert INT4.qmax_pos == 7
+    assert INT4.qmin == -7  # narrow range (symmetric, paper eqn (2))
+    assert INT4.levels == 15
+
+
+def test_int8_range():
+    assert INT8.qmax_pos == 127
+    assert INT8.qmin == -127
+
+
+def test_int_qdq_is_round_clip():
+    x = jnp.asarray([-9.0, -7.4, -0.49, 0.0, 0.51, 6.5, 7.2, 100.0])
+    y = INT4.qdq_unit(x)
+    #                 clip   round  round  0   round  r.t.e  clip  clip
+    np.testing.assert_array_equal(
+        np.asarray(y), [-7.0, -7.0, 0.0, 0.0, 1.0, 6.0, 7.0, 7.0]
+    )
+
+
+def test_int_round_half_even():
+    # jnp.round is round-half-to-even: 0.5 -> 0, 1.5 -> 2, 2.5 -> 2
+    x = jnp.asarray([0.5, 1.5, 2.5, -0.5, -1.5])
+    np.testing.assert_array_equal(
+        np.asarray(INT8.qdq_unit(x)), [0.0, 2.0, 2.0, -0.0, -2.0]
+    )
+
+
+# ---------------------------------------------------------------- fp formats
+def test_e2m1_params():
+    # E2M1: bias 1, max = 1.5 * 2^(3-1) = 6
+    assert FP4_E2M1.qmax_pos == 6.0
+    vals = representable_values(FP4_E2M1)
+    np.testing.assert_allclose(vals, [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0])
+
+
+def test_e1m2_params():
+    # E1M2: bias 0, max = 1.75 * 2^(1-0) = 3.5.  Subnormal quantum is
+    # 2^min_normal_exp / 4 = 0.5, so the grid is NEAR-UNIFORM — the reason
+    # the paper finds E1M2 ~ INT4 in Table II.
+    assert FP4_E1M2.qmax_pos == 3.5
+    vals = representable_values(FP4_E1M2)
+    np.testing.assert_allclose(
+        vals, [0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5]
+    )
+
+
+def test_e4m3_ocp_max():
+    assert FP8_E4M3.qmax_pos == 448.0  # OCP: exponent-15 mantissa-110 max
+    vals = representable_values(FP8_E4M3)
+    assert vals.max() == 448.0
+    # subnormal quantum: 2^-6 / 8 = 2^-9
+    positives = vals[vals > 0]
+    assert positives.min() == pytest.approx(2.0**-9)
+
+
+@pytest.mark.parametrize("fmt", [FP4_E2M1, FP4_E1M2, FP8_E4M3])
+def test_fp_qdq_maps_to_grid(fmt):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.uniform(-fmt.qmax_pos, fmt.qmax_pos, size=512),
+                    jnp.float32)
+    y = np.asarray(fmt.qdq_unit(x))
+    grid = representable_values(fmt)
+    full = np.concatenate([-grid[::-1], grid])
+    # every output value is on the representable grid
+    dist = np.min(np.abs(y[:, None] - full[None, :]), axis=1)
+    assert dist.max() < 1e-6
+
+
+@pytest.mark.parametrize("fmt", [FP4_E2M1, FP4_E1M2, FP8_E4M3])
+def test_fp_qdq_nearest(fmt):
+    """QDQ picks the nearest representable value (ties OK either way)."""
+    rng = np.random.RandomState(1)
+    x = rng.uniform(-fmt.qmax_pos, fmt.qmax_pos, size=256).astype(np.float32)
+    y = np.asarray(fmt.qdq_unit(jnp.asarray(x)))
+    grid = representable_values(fmt)
+    full = np.sort(np.concatenate([-grid[::-1], grid]))
+    best = np.min(np.abs(x[:, None] - full[None, :]), axis=1)
+    got = np.abs(x - y)
+    assert np.all(got <= best + 1e-6)
+
+
+def test_fp_qdq_saturates():
+    big = jnp.asarray([1e9, -1e9])
+    np.testing.assert_array_equal(
+        np.asarray(FP8_E4M3.qdq_unit(big)), [448.0, -448.0]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(FP4_E2M1.qdq_unit(big)), [6.0, -6.0]
+    )
+
+
+def test_fp_zero_preserved():
+    for fmt in (FP4_E2M1, FP4_E1M2, FP8_E4M3):
+        assert float(fmt.qdq_unit(jnp.asarray(0.0))) == 0.0
+
+
+@given(st.floats(min_value=-6.0, max_value=6.0, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_e2m1_idempotent(v):
+    fmt = FP4_E2M1
+    once = float(fmt.qdq_unit(jnp.asarray(v, jnp.float32)))
+    twice = float(fmt.qdq_unit(jnp.asarray(once, jnp.float32)))
+    assert once == twice
+
+
+def test_get_format_lookup():
+    assert get_format("int4") is INT4
+    assert get_format("E4M3").qmax_pos == 448.0
+    with pytest.raises(ValueError):
+        get_format("int99")
+
+
+def test_format_registry_complete():
+    for name in ("int4", "int8", "e2m1", "e1m2", "e4m3", "e5m2"):
+        assert name in BY_NAME

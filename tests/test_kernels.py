@@ -1,0 +1,171 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per instructions: sweep shapes/dtypes per kernel, assert_allclose against
+ref.py.  Block shapes exercise multi-tile grids (M,K,N > block)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import FP4_E1M2, FP4_E2M1, FP8_E4M3, INT4, INT8
+from repro.kernels import ops
+from repro.kernels.abfp_qdq import abfp_qdq as pallas_qdq
+from repro.kernels.quant_matmul import abfp_matmul, abfp_matmul_int8
+from repro.kernels.ref import abfp_matmul_ref, abfp_qdq_ref, int8_matmul_ref
+
+FMT_SWEEP = [INT4, INT8, FP4_E2M1, FP4_E1M2, FP8_E4M3]
+
+
+# ------------------------------------------------------------------ QDQ kernel
+@pytest.mark.parametrize("fmt", FMT_SWEEP, ids=lambda f: f.name)
+@pytest.mark.parametrize("shape", [(8, 64), (32, 128), (256, 512), (512, 192)])
+def test_qdq_kernel_vs_ref(fmt, shape):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(*shape) * 2, jnp.float32)
+    got = pallas_qdq(x, fmt, n=64, block_m=min(256, shape[0]),
+                     block_k=min(512, shape[1]), interpret=True)
+    want = abfp_qdq_ref(x, fmt, n=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [64, 128])
+def test_qdq_kernel_vector_lengths(n):
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(16, 256), jnp.float32)
+    got = pallas_qdq(x, INT4, n=n, block_m=16, block_k=256, interpret=True)
+    want = abfp_qdq_ref(x, INT4, n=n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qdq_kernel_dtypes(dtype):
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(8, 128), dtype)
+    got = pallas_qdq(x, INT8, n=64, block_m=8, block_k=128, interpret=True)
+    want = abfp_qdq_ref(x, INT8, n=64)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=1e-2, atol=1e-2)
+
+
+def test_qdq_kernel_multitile_grid():
+    """Values must not leak between grid tiles."""
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(64, 256), jnp.float32)
+    # 4x2 grid of (16, 128) tiles
+    got = pallas_qdq(x, INT4, n=64, block_m=16, block_k=128, interpret=True)
+    want = abfp_qdq_ref(x, INT4, n=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+# ----------------------------------------------------------- fp matmul kernel
+@pytest.mark.parametrize("fmt", FMT_SWEEP, ids=lambda f: f.name)
+def test_matmul_kernel_vs_ref_formats(fmt):
+    rng = np.random.RandomState(4)
+    x = jnp.asarray(rng.randn(32, 128), jnp.float32)
+    w = jnp.asarray(rng.randn(128, 64), jnp.float32)
+    got = abfp_matmul(x, w, fmt, fmt, n=64, block_m=32, block_n=64,
+                      block_k=64, interpret=True)
+    want = abfp_matmul_ref(x, w, fmt, fmt, n=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "M,K,N,bm,bn,bk",
+    [
+        (16, 64, 16, 16, 16, 64),     # single tile
+        (64, 256, 32, 32, 32, 64),    # K-loop accumulation over 4 steps
+        (128, 128, 128, 64, 64, 128), # M,N grid
+        (32, 512, 96, 32, 32, 128),   # non-square
+    ],
+)
+def test_matmul_kernel_shapes(M, K, N, bm, bn, bk):
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(M, K), jnp.float32)
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    got = abfp_matmul(x, w, INT4, INT8, n=64, block_m=bm, block_n=bn,
+                      block_k=bk, interpret=True)
+    want = abfp_matmul_ref(x, w, INT4, INT8, n=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_kernel_mixed_formats():
+    """Paper's W4-AE4M3 mixed config through the fused kernel."""
+    rng = np.random.RandomState(6)
+    x = jnp.asarray(rng.randn(16, 128), jnp.float32)
+    w = jnp.asarray(rng.randn(128, 32), jnp.float32)
+    got = abfp_matmul(x, w, FP8_E4M3, INT4, n=64, block_m=16, block_n=32,
+                      block_k=128, interpret=True)
+    want = abfp_matmul_ref(x, w, FP8_E4M3, INT4, n=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------- int8 native kernel
+@pytest.mark.parametrize("fx,fw", [(INT8, INT8), (INT8, INT4)])
+def test_int8_matmul_kernel_vs_ref(fx, fw):
+    rng = np.random.RandomState(7)
+    x = jnp.asarray(rng.randn(32, 128), jnp.float32)
+    w = jnp.asarray(rng.randn(128, 64), jnp.float32)
+    got = abfp_matmul_int8(x, w, fx, fw, n=64, block_m=32, block_n=64,
+                           block_k=64, interpret=True)
+    want = int8_matmul_ref(x, w, fx, fw, n=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_int8_matmul_equals_fp_path():
+    """Native int path == QDQ-then-fp32-matmul for int formats (exactness
+    of the factored rescale)."""
+    rng = np.random.RandomState(8)
+    x = jnp.asarray(rng.randn(16, 128), jnp.float32)
+    w = jnp.asarray(rng.randn(128, 16), jnp.float32)
+    ref_fp = abfp_matmul_ref(x, w, INT8, INT8, n=64)
+    ref_int = int8_matmul_ref(x, w, INT8, INT8, n=64)
+    np.testing.assert_allclose(np.asarray(ref_fp), np.asarray(ref_int),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- wrappers
+def test_ops_qdq_flattens_leading_dims():
+    rng = np.random.RandomState(9)
+    x = jnp.asarray(rng.randn(2, 3, 128), jnp.float32)
+    got = ops.abfp_qdq(x, INT4, n=64, interpret=True)
+    want = abfp_qdq_ref(x.reshape(-1, 128), INT4, n=64).reshape(2, 3, 128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_ops_fused_matmul_policy_dispatch():
+    from repro.core.policy import preset
+
+    rng = np.random.RandomState(10)
+    x = jnp.asarray(rng.randn(4, 8, 128), jnp.float32)
+    w = jnp.asarray(rng.randn(128, 64), jnp.float32)
+    pol = preset("w4a8_abfp")
+    got = ops.abfp_matmul_fused(x, w, pol, interpret=True)
+    want = abfp_matmul_ref(
+        x.reshape(-1, 128), w, INT8, INT4, n=64
+    ).reshape(4, 8, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_qmatmul_route():
+    """policy.fused=True routes qmatmul through the Pallas kernel and
+    matches the unfused simulate path."""
+    from repro.core.policy import preset
+    from repro.core.simulate import qmatmul
+
+    rng = np.random.RandomState(11)
+    x = jnp.asarray(rng.randn(8, 128), jnp.float32)
+    w = jnp.asarray(rng.randn(128, 32), jnp.float32)
+    pol = preset("w4a8_abfp")
+    unfused = qmatmul(x, w, pol)
+    fused = qmatmul(x, w, pol.replace(fused=True))
+    np.testing.assert_allclose(np.asarray(unfused), np.asarray(fused),
+                               rtol=1e-4, atol=1e-4)

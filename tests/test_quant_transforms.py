@@ -1,0 +1,122 @@
+"""Model-level PTQ drivers (calibrate -> static q / SQ / GPTQ / RPTQ)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.formats import INT4, INT8
+from repro.core.policy import preset
+from repro.models import build_model
+from repro.models import quant_transforms as qt
+from repro.nn.module import unbox
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("opt-tiny").replace(n_layers=2)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    rng = np.random.RandomState(0)
+    batches = [
+        {"tokens": rng.randint(0, 500, (2, 32)).astype(np.int32)}
+        for _ in range(3)
+    ]
+    calib = qt.calibrate(model, params, batches, preset("w4a8_mse"),
+                         collect_outer=True)
+    return cfg, model, params, batches, calib
+
+
+def test_calibrate_covers_all_matmul_sites(setup):
+    cfg, model, params, batches, calib = setup
+    per_layer = ["attn/q/in", "attn/k/in", "attn/v/in", "attn/o/in",
+                 "attn/bmm_q", "attn/bmm_k", "attn/bmm_v", "attn/probs",
+                 "ffn/wi/in", "ffn/wo/in"]
+    for i in range(cfg.n_layers):
+        for s in per_layer:
+            assert f"blocks.{i}/{s}" in calib.stats
+    assert "embed/attend/in" in calib.stats
+
+
+def test_static_qtree_structure_and_forward(setup):
+    cfg, model, params, batches, calib = setup
+    q = qt.static_qtree(calib, INT8, cfg.n_layers, method="mse")
+    assert len(q["blocks"]) == cfg.n_layers
+    b0 = q["blocks"][0]
+    assert "in_alpha" in b0["attn"]["q"]
+    assert "in_alpha" in b0["ffn"]["wo"]
+    logits, _ = model.apply(params, batches[0], preset("w4a8_mse"), q=q)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_static_alphas_reduce_loss_vs_uncalibrated_w4a4(setup):
+    """Static per-site MSE scales should beat the dynamic-max fallback at
+    4-bit (the fallback clips nothing, wasting codes on outliers)."""
+    cfg, model, params, batches, calib = setup
+    pol = preset("w4a4_mse")
+    q = qt.static_qtree(calib, INT4, cfg.n_layers, method="mse")
+    ref, _ = model.apply(params, batches[0], preset("fp32"))
+
+    def mse(q):
+        out, _ = model.apply(params, batches[0], pol, q=q)
+        return float(jnp.mean((out - ref) ** 2))
+
+    assert mse(q) <= mse(None) * 1.5  # never catastrophically worse
+
+
+def test_smoothquant_identity_fp32(setup):
+    cfg, model, params, batches, calib = setup
+    sq = qt.apply_smoothquant(params, calib)
+    ref, _ = model.apply(params, batches[0], preset("fp32"))
+    got, _ = model.apply(sq, batches[0], preset("fp32"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_smoothquant_flattens_activation_ranges(setup):
+    cfg, model, params, batches, calib = setup
+    sq = qt.apply_smoothquant(params, calib)
+    calib2 = qt.calibrate(model, sq, batches, preset("w4a8_mse"))
+    site = "blocks.0/attn/q/in"
+    r_before = calib.stats[site].ch_absmax
+    r_after = calib2.stats[site].ch_absmax
+    spread = lambda r: r.max() / np.maximum(r.min(), 1e-6)
+    assert spread(r_after) < spread(r_before)
+
+
+def test_gptq_improves_w4_model_output(setup):
+    """GPTQ'd weights + W4A16 run closer to fp32 than RTN weights."""
+    cfg, model, params, batches, calib = setup
+    ref, _ = model.apply(params, batches[0], preset("fp32"))
+
+    gq, infos = qt.apply_gptq(params, calib, INT4)
+    assert len(infos) == cfg.n_layers * 6  # q,k,v,o,wi,wo per layer
+    # GPTQ'd params run in fp32 (weights already quantized)
+    got_gptq, _ = model.apply(gq, batches[0], preset("fp32"))
+    # RTN baseline: weight-only quantization via the policy
+    got_rtn, _ = model.apply(params, batches[0], preset("w4a16")
+                             .replace(weight=preset("w4a16").weight.replace(
+                                 scaler="channel_max")))
+    e_gptq = float(jnp.mean((got_gptq - ref) ** 2))
+    e_rtn = float(jnp.mean((got_rtn - ref) ** 2))
+    assert e_gptq < e_rtn
+
+
+def test_rptq_qtree_runs(setup):
+    cfg, model, params, batches, calib = setup
+    q, perms = qt.rptq_qtree(calib, cfg.n_layers, num_clusters=4)
+    assert perms  # at least some sites clustered
+    out, _ = model.apply(params, batches[0], preset("w4a8_mse"), q=q)
+    assert np.isfinite(np.asarray(out)).all()
+    # per-channel alphas have channel dimensionality
+    a = q["blocks"][0]["attn"]["q"]["in_alpha"]
+    assert a.shape == (cfg.d_model,)
+
+
+def test_qtree_wg_aliases_wi(setup):
+    cfg, model, params, batches, calib = setup
+    qtree = qt.static_qtree(calib, INT8, cfg.n_layers)
+    for b in qtree["blocks"]:
+        if "ffn" in b and "wi" in b["ffn"]:
+            assert "wg" in b["ffn"]

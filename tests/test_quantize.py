@@ -1,0 +1,117 @@
+"""QDQ primitives (paper eqns (1)-(3)) and the PWL-STE (eqn (5))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.formats import FP8_E4M3, INT4, INT8
+from repro.core.quantize import dequantize, qdq, qdq_ste, quantize
+
+
+def test_qdq_alpha_maps_to_top_code():
+    # alpha lands exactly on the top code
+    x = jnp.asarray([3.0, -3.0])
+    y = qdq(x, jnp.asarray(3.0), INT4)
+    np.testing.assert_allclose(np.asarray(y), [3.0, -3.0], rtol=1e-6)
+
+
+def test_qdq_step_size():
+    # with alpha=7, int4 step = 1.0: values quantize to integers
+    x = jnp.asarray([0.4, 0.6, 1.49, 6.9, 30.0])
+    y = qdq(x, jnp.asarray(7.0), INT4)
+    np.testing.assert_allclose(np.asarray(y), [0.0, 1.0, 1.0, 7.0, 7.0])
+
+
+def test_qdq_clips_outside_alpha():
+    x = jnp.asarray([10.0, -10.0])
+    y = qdq(x, jnp.asarray(2.0), INT8)
+    np.testing.assert_allclose(np.asarray(y), [2.0, -2.0], rtol=1e-6)
+
+
+def test_quantize_dequantize_roundtrip():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.uniform(-5, 5, 128), jnp.float32)
+    codes, scale = quantize(x, jnp.asarray(5.0), INT8)
+    assert codes.dtype == jnp.int8
+    xhat = dequantize(codes, scale)
+    # max error is half a step
+    step = 5.0 / 127
+    assert float(jnp.abs(xhat - x).max()) <= step / 2 + 1e-6
+    # consistency with qdq
+    np.testing.assert_allclose(
+        np.asarray(xhat), np.asarray(qdq(x, jnp.asarray(5.0), INT8)),
+        rtol=1e-6)
+
+
+@given(
+    st.floats(min_value=0.1, max_value=100.0, allow_nan=False),
+    st.integers(min_value=0, max_value=1000),
+)
+@settings(max_examples=100, deadline=None)
+def test_qdq_error_bound_property(alpha, seed):
+    """|QDQ(x) - x| <= step/2 for |x| <= alpha (int formats)."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.uniform(-alpha, alpha, 64), jnp.float32)
+    y = qdq(x, jnp.asarray(alpha, jnp.float32), INT8)
+    step = alpha / 127
+    assert float(jnp.abs(y - x).max()) <= step / 2 + 1e-5 * alpha
+
+
+@pytest.mark.parametrize("fmt", [INT4, INT8, FP8_E4M3])
+def test_qdq_idempotent(fmt):
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.uniform(-4, 4, 256), jnp.float32)
+    a = jnp.asarray(4.0)
+    once = qdq(x, a, fmt)
+    twice = qdq(once, a, fmt)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_qdq_per_channel_alpha_broadcast():
+    x = jnp.ones((4, 3))
+    alpha = jnp.asarray([1.0, 2.0, 4.0])
+    y = qdq(x * alpha, alpha, INT4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x * alpha),
+                               rtol=1e-6)
+
+
+# ------------------------------------------------------------------ PWL STE
+def test_ste_forward_equals_qdq():
+    x = jnp.linspace(-3, 3, 32)
+    a = jnp.asarray(2.0)
+    np.testing.assert_allclose(
+        np.asarray(qdq_ste(x, a, INT4)), np.asarray(qdq(x, a, INT4))
+    )
+
+
+def test_ste_gradient_is_pwl_mask():
+    """eqn (5): dQ/dx = 1{|x| <= alpha}."""
+    x = jnp.asarray([-3.0, -1.0, 0.0, 1.5, 2.5])
+    a = jnp.asarray(2.0)
+    g = jax.grad(lambda x: qdq_ste(x, a, INT4).sum())(x)
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+def test_ste_no_gradient_to_alpha():
+    x = jnp.linspace(-1, 1, 8)
+    g = jax.grad(lambda a: qdq_ste(x, a, INT4).sum())(jnp.asarray(2.0))
+    assert float(g) == 0.0
+
+
+def test_ste_through_matmul():
+    """QAT composition: gradients flow through quantized matmul."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(4, 8), jnp.float32)
+    w = jnp.asarray(rng.randn(8, 2), jnp.float32)
+
+    def loss(w):
+        wq = qdq_ste(w, jnp.abs(w).max(), INT4)
+        return jnp.sum((x @ wq) ** 2)
+
+    g = jax.grad(loss)(w)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.abs(g).max()) > 0

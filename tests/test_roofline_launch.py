@@ -1,0 +1,147 @@
+"""Roofline extraction + launch-spec unit tests (no device allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch import roofline as rf
+from repro.launch import specs as sp
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_BF16_FLOPS
+
+
+# ------------------------------------------------------------- HLO parsing
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=[16,16], dimensions={0}
+  %ar = f32[256,256]{1,0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = bf16[8,128]{1,0} reduce-scatter(%z), replica_groups=[32,8], dimensions={0}
+  %cp = f32[64]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %dot = f32[8,8]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_parses_kinds():
+    out = rf.collective_bytes(HLO_SAMPLE)
+    assert out["counts"] == {
+        "all-gather": 1, "all-reduce": 1, "reduce-scatter": 1,
+        "collective-permute": 1,
+    }
+    # all-gather: 16*1024*2 bytes * (16-1)/16
+    ag = 16 * 1024 * 2 * 15 / 16
+    assert out["bytes_by_kind"]["all-gather"] == pytest.approx(ag)
+    # all-reduce over groups of 4: 2 * bytes * 3/4
+    ar = 2 * 256 * 256 * 4 * 3 / 4
+    assert out["bytes_by_kind"]["all-reduce"] == pytest.approx(ar)
+    # permute: result bytes
+    assert out["bytes_by_kind"]["collective-permute"] == 64 * 4
+
+
+def test_collective_bytes_ignores_non_collectives():
+    out = rf.collective_bytes("%d = f32[128,128]{1,0} dot(%a, %b)")
+    assert out["total_bytes"] == 0
+
+
+# ------------------------------------------------------------ roofline math
+def test_roofline_terms_dominance():
+    t = rf.roofline_terms(flops=PEAK_BF16_FLOPS, bytes_accessed=0.0,
+                          coll_bytes=0.0)
+    assert t["dominant"] == "compute"
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    t = rf.roofline_terms(0.0, HBM_BW * 2, 0.0)
+    assert t["dominant"] == "memory" and t["t_memory_s"] == pytest.approx(2.0)
+    t = rf.roofline_terms(0.0, 0.0, ICI_BW * 3)
+    assert t["dominant"] == "collective"
+    assert t["compute_fraction_of_bound"] == 0.0
+
+
+def test_extrapolation_affine():
+    c1 = {"flops": 10.0, "bytes": 100.0, "collective_bytes": 5.0}
+    c2 = {"flops": 16.0, "bytes": 160.0, "collective_bytes": 7.0}
+    out = rf.extrapolate(c1, c2, periods=10)
+    # fixed + 10*per_period: fixed = 2*c1 - c2
+    assert out["flops"] == pytest.approx(10 + 9 * 6)
+    assert out["bytes_fixed"] == pytest.approx(40.0)
+    assert out["collective_bytes_per_period"] == pytest.approx(2.0)
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("qwen2-7b")
+    tr = rf.model_flops(cfg, SHAPES["train_4k"], chips=256)
+    de = rf.model_flops(cfg, SHAPES["decode_32k"], chips=256)
+    n = cfg.n_params()
+    assert tr == pytest.approx(6 * n * 4096 * 256 / 256)
+    assert de == pytest.approx(2 * n * 128 / 256)
+
+
+def test_model_flops_moe_active():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    assert cfg.n_active_params() < 0.3 * cfg.n_params()
+    f = rf.model_flops(cfg, SHAPES["train_4k"], chips=256)
+    assert f == pytest.approx(6 * cfg.n_active_params() * 4096 * 256 / 256)
+
+
+# ------------------------------------------------------------ batch fitting
+class _Mesh:
+    def __init__(self, axes, shape):
+        self.axis_names = axes
+
+        class _D:
+            def __init__(s, sh):
+                s.shape = sh
+
+        self.devices = _D(shape)
+
+
+def test_fit_batch_rule_keeps_dividing_prefix():
+    rules = {"batch": ("pod", "data", "model")}
+    mesh = _Mesh(("pod", "data", "model"), (2, 16, 16))
+    out = sp.fit_batch_rule(rules, 256, mesh)
+    # 256 % 2 == 0, % 32 == 0, % 512 != 0 -> keep (pod, data)
+    assert out["batch"] == ("pod", "data")
+    out = sp.fit_batch_rule(rules, 512, mesh)
+    assert out["batch"] == ("pod", "data", "model")
+    out = sp.fit_batch_rule(rules, 1, mesh)
+    assert out["batch"] is None
+
+
+def test_fit_batch_rule_none_passthrough():
+    mesh = _Mesh(("data",), (8,))
+    assert sp.fit_batch_rule({"batch": None}, 7, mesh)["batch"] is None
+
+
+def test_rules_for_fsdp_strategy():
+    cfg = get_config("gemma2-9b")
+    rules = sp.rules_for(cfg, SHAPES["train_4k"], strategy="fsdp")
+    assert rules["batch"] == ("pod", "data", "model")
+    assert rules["seq_res"] is None
+    assert rules["mlp"] == ("data", "model")
+    # default strategy unchanged
+    base = sp.rules_for(cfg, SHAPES["train_4k"])
+    assert base["mlp"] == "model"
+
+
+def test_rules_for_long_context():
+    cfg = get_config("mamba2-130m")
+    rules = sp.rules_for(cfg, SHAPES["long_500k"])
+    assert rules["batch"] is None
+    assert rules["kv_seq"] == ("pod", "data", "model")
+
+
+# ------------------------------------------------------------- batch specs
+def test_batch_specs_families():
+    for arch, extra in (("qwen2-7b", None), ("internvl2-2b", "patch_embeds"),
+                        ("whisper-large-v3", "frames")):
+        cfg = get_config(arch)
+        sds, axes = sp.batch_specs(cfg, SHAPES["train_4k"])
+        assert "tokens" in sds and "labels" in sds
+        if extra:
+            assert extra in sds and extra in axes
+        for k, v in sds.items():
+            assert isinstance(v, jax.ShapeDtypeStruct)
+        if arch == "internvl2-2b":
+            # vlm: patches + tokens = seq_len
+            assert (sds["tokens"].shape[1] + sds["patch_embeds"].shape[1]
+                    == 4096)

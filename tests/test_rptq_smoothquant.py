@@ -1,0 +1,138 @@
+"""RPTQ (§II-B5) and SmoothQuant (§II-B3) unit tests."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rptq
+from repro.core.formats import INT4
+from repro.core.quantize import qdq
+from repro.core.smoothquant import (
+    fold_into_norm,
+    smooth_linear,
+    smoothing_factors,
+)
+
+
+# ------------------------------------------------------------------- RPTQ
+def test_rptq_clusters_by_range():
+    # two obvious channel populations: tiny range vs huge range
+    ch_min = np.asarray([-0.1, -0.11, -9.0, -10.0], np.float32)
+    ch_max = np.asarray([0.1, 0.12, 9.5, 10.0], np.float32)
+    res = rptq.solve(ch_min, ch_max, num_clusters=2)
+    # channels 0,1 share a cluster; 2,3 share the other
+    assert res.cluster_of[0] == res.cluster_of[1]
+    assert res.cluster_of[2] == res.cluster_of[3]
+    assert res.cluster_of[0] != res.cluster_of[2]
+    # alphas: max |range| within each cluster
+    a_small = res.alpha_per_channel[0]
+    a_big = res.alpha_per_channel[2]
+    assert a_small == np.float32(0.12)
+    assert a_big == np.float32(10.0)
+
+
+def test_rptq_perm_is_cluster_contiguous():
+    rng = np.random.RandomState(0)
+    ch_min = -np.abs(rng.randn(32)).astype(np.float32)
+    ch_max = np.abs(rng.randn(32)).astype(np.float32)
+    res = rptq.solve(ch_min, ch_max, num_clusters=4)
+    reordered = res.cluster_of[res.perm]
+    # cluster ids must be non-interleaved after the permutation
+    changes = (np.diff(reordered) != 0).sum()
+    assert changes <= len(np.unique(res.cluster_of)) - 1 + 1
+
+
+def test_rptq_quantization_better_than_per_tensor():
+    """Cluster scales beat one global scale when ranges differ wildly."""
+    rng = np.random.RandomState(1)
+    x = np.concatenate(
+        [0.05 * rng.randn(256, 24), 10 * rng.randn(256, 8)], axis=1
+    ).astype(np.float32)
+    res = rptq.solve(x.min(0), x.max(0), num_clusters=2)
+    xq_rptq = np.asarray(
+        qdq(jnp.asarray(x), jnp.asarray(res.alpha_per_channel), INT4)
+    )
+    xq_tensor = np.asarray(
+        qdq(jnp.asarray(x), jnp.asarray(np.abs(x).max()), INT4)
+    )
+    assert ((xq_rptq - x) ** 2).mean() < ((xq_tensor - x) ** 2).mean()
+
+
+def test_rptq_fold_permutation_identity():
+    """Running [prev -> perm -> next] == original network."""
+    rng = np.random.RandomState(2)
+    x = rng.randn(16, 8).astype(np.float32)
+    w_prev = rng.randn(8, 12).astype(np.float32)  # produces 12 channels
+    w_next = rng.randn(12, 4).astype(np.float32)
+    res = rptq.solve(
+        (x @ w_prev).min(0), (x @ w_prev).max(0), num_clusters=3
+    )
+    wp, wn = rptq.fold_permutation(w_prev, w_next, res.perm)
+    orig = (x @ w_prev) @ w_next
+    perm = (x @ wp) @ wn
+    np.testing.assert_allclose(orig, perm, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ SmoothQuant
+def test_smoothing_factors_formula():
+    a = np.asarray([4.0, 1.0], np.float32)
+    w = np.asarray([1.0, 4.0], np.float32)
+    s = smoothing_factors(a, w, alpha=0.5)
+    np.testing.assert_allclose(s, [2.0, 0.5], rtol=1e-6)
+
+
+def test_smoothing_alpha_extremes():
+    a = np.asarray([8.0], np.float32)
+    w = np.asarray([2.0], np.float32)
+    np.testing.assert_allclose(smoothing_factors(a, w, 1.0), [8.0])
+    np.testing.assert_allclose(smoothing_factors(a, w, 0.0), [0.5])
+
+
+def test_smooth_linear_identity():
+    """(x / s) @ (s * w) == x @ w (the SQ migration identity)."""
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(32, 16), jnp.float32)
+    w = jnp.asarray(rng.randn(16, 8), jnp.float32)
+    s, w_new = smooth_linear(w, np.abs(np.asarray(x)).max(0))
+    y0 = x @ w
+    y1 = (x / s) @ w_new
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_smooth_migrates_outliers():
+    """After smoothing, activation channel ranges are flattened."""
+    rng = np.random.RandomState(4)
+    x = rng.randn(256, 16).astype(np.float32)
+    x[:, 3] *= 50  # activation outlier channel (the LLM pathology)
+    w = rng.randn(16, 8).astype(np.float32)
+    s, _ = smooth_linear(jnp.asarray(w), np.abs(x).max(0))
+    x_sm = x / np.asarray(s)
+    ratio_before = np.abs(x).max(0).max() / np.abs(x).max(0).min()
+    ratio_after = np.abs(x_sm).max(0).max() / np.abs(x_sm).max(0).min()
+    assert ratio_after < ratio_before / 2
+
+
+def test_fold_into_norm():
+    scale = jnp.asarray([2.0, 4.0])
+    s = jnp.asarray([2.0, 0.5])
+    np.testing.assert_allclose(np.asarray(fold_into_norm(scale, s)),
+                               [1.0, 8.0])
+
+
+def test_quantized_matmul_better_after_sq():
+    """End effect: W4A4 matmul error drops when SQ rebalances scales."""
+    rng = np.random.RandomState(5)
+    x = rng.randn(128, 32).astype(np.float32)
+    x[:, 0] *= 30
+    w = (0.05 * rng.randn(32, 16)).astype(np.float32)
+    y_ref = x @ w
+
+    def q_err(xa, wa):
+        xq = np.asarray(qdq(jnp.asarray(xa), jnp.abs(xa).max(), INT4))
+        wq = np.asarray(qdq(jnp.asarray(wa), jnp.abs(wa).max(), INT4))
+        return ((xq @ wq - y_ref) ** 2).mean()
+
+    s, w_sm = smooth_linear(jnp.asarray(w), np.abs(x).max(0))
+    e_plain = q_err(x, w)
+    e_sq = q_err(x / np.asarray(s), np.asarray(w_sm))
+    assert e_sq < e_plain

@@ -1,0 +1,196 @@
+"""Serving-mode transforms (§Perf): prequantize / compress / KV-on-write."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import preset
+from repro.models import build_model
+from repro.models import serving_transforms as st
+from repro.nn.module import unbox
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2-7b").reduced()
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    batch = {"tokens": (jnp.arange(24)[None] % 97).astype(jnp.int32)}
+    return cfg, model, params, batch
+
+
+def test_prequantize_idempotent_equals_runtime(setup):
+    """QDQ is idempotent: prequantized weights + weightless policy give the
+    SAME logits as runtime weight QDQ."""
+    cfg, model, params, batch = setup
+    pol = preset("w4a8_abfp")
+    pre = st.prequantize_weights(params, pol)
+    lg_runtime, _ = model.apply(params, batch, pol)
+    lg_served, _ = model.apply(pre, batch, st.serving_policy(pol))
+    np.testing.assert_allclose(np.asarray(lg_runtime), np.asarray(lg_served),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_compress_decompress_matches_prequant(setup):
+    cfg, model, params, batch = setup
+    pol = preset("w4a8_abfp")
+    comp = st.compress_weights(params, pol)
+    pre = st.prequantize_weights(params, pol)
+
+    found = []
+
+    def walk(a, b, path=""):
+        if isinstance(a, dict):
+            for k in a:
+                walk(a[k], b[k], path + "/" + k)
+        elif isinstance(a, (list, tuple)) and not hasattr(a, "ndim"):
+            for i, (x, y) in enumerate(zip(a, b)):
+                walk(x, y, f"{path}[{i}]")
+        elif isinstance(a, st.CompressedKernel):
+            w = st.decompress_kernel(a)
+            np.testing.assert_allclose(np.asarray(w), np.asarray(b),
+                                       rtol=1e-4, atol=1e-6, err_msg=path)
+            assert a.codes.dtype == jnp.int8
+            found.append(path)
+
+    walk(comp, pre)
+    assert len(found) >= 5  # q,k,v,o,wi,wg,wo (+head)
+
+
+def test_compressed_serving_exact(setup):
+    cfg, model, params, batch = setup
+    pol = preset("w4a8_abfp")
+    comp = st.compress_weights(params, pol)
+    lg_runtime, _ = model.apply(params, batch, pol)
+    lg_comp, _ = model.apply(comp, batch, st.serving_policy(pol))
+    np.testing.assert_allclose(np.asarray(lg_runtime), np.asarray(lg_comp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_compressed_storage_smaller():
+    """int8 codes + f32 group scales < half the f32 dense bytes."""
+    cfg = get_config("qwen2-7b").reduced()
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(1)))
+    comp = st.compress_weights(params, preset("w4a8_abfp"))
+
+    def nbytes(t):
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(t)
+                   if hasattr(x, "dtype"))
+
+    def kernels_only(tree):
+        out = []
+
+        def rec(n):
+            if isinstance(n, dict):
+                for k, v in n.items():
+                    if k == "kernel":
+                        out.append(v)
+                    else:
+                        rec(v)
+            elif isinstance(n, (list, tuple)) and not hasattr(n, "ndim"):
+                for v in n:
+                    rec(v)
+
+        rec(tree)
+        return out
+
+    dense_b = sum(nbytes(k) for k in kernels_only(params))
+    comp_b = sum(nbytes(k) for k in kernels_only(comp))
+    assert comp_b < 0.5 * dense_b
+
+
+def test_kv_on_write_decode_close_to_requant(setup):
+    """Write-time KV quantization tracks the paper-faithful re-QDQ path.
+
+    K is exact (same head_dim groups); V differs (per-token vs per-seq
+    groups) — outputs must stay close, and greedy tokens mostly agree."""
+    cfg, model, params, batch = setup
+    pol = preset("w4a8_abfp")
+    pol_w = pol.replace(kv_cache="on_write")
+
+    lg_a, st_a = model.prefill(params, batch, pol, max_len=40)
+    lg_b, st_b = model.prefill(params, batch, pol_w, max_len=40)
+    np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b),
+                               rtol=0.1, atol=0.15)
+
+    tok = jnp.argmax(lg_a, axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(4):
+        lg_a, st_a = model.decode_step(params, tok, st_a, pol)
+        lg_b, st_b = model.decode_step(params, tok, st_b, pol_w)
+        c = np.corrcoef(np.asarray(lg_a).ravel(),
+                        np.asarray(lg_b).ravel())[0, 1]
+        assert c > 0.99
+        tok = jnp.argmax(lg_a, axis=-1)[:, None].astype(jnp.int32)
+
+
+def test_kv_on_write_k_path_exact(setup):
+    """With V-quant disabled by construction (probs@V unquantized when
+    attn_bmm only quantizes K at write), the K path is bit-equal: verify
+    via a policy without attn probs... simplified: cache K entries match
+    the runtime-QDQ'd K."""
+    from repro.nn.attention import Attention
+    from repro.nn.module import unbox as ub
+
+    attn = Attention(d_model=64, n_heads=4, n_kv=2, head_dim=16)
+    params = ub(attn.init(jax.random.PRNGKey(3)))
+    pol = preset("w4a8_abfp").replace(kv_cache="on_write")
+    x = jnp.asarray(np.random.RandomState(0).randn(1, 1, 64), jnp.float32)
+    cache = attn.init_cache(1, max_len=4, dtype=jnp.float32)
+    _, cache = attn.decode_step(params, x, cache,
+                                position=jnp.asarray(0, jnp.int32),
+                                policy=pol)
+    # the written K row must be on the int8 ABFP grid for its head groups
+    from repro.core.abfp import abfp_qdq
+    from repro.core.formats import INT8
+
+    krow = cache.k[0, 0].reshape(2, 16)
+    re_q = abfp_qdq(krow, INT8, axis=-1, n=64)
+    np.testing.assert_allclose(np.asarray(krow), np.asarray(re_q),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_int8_kv_cache_decode_matches_requant(setup):
+    """REAL int8 KV storage: logits track the ABFP-requant path and the
+    cache is materially smaller."""
+    cfg, model, params, batch = setup
+    pol = preset("w4a8_abfp")
+    pol8 = pol.replace(kv_cache="int8")
+
+    lg_a, st_a = model.prefill(params, batch, pol, max_len=40)
+    lg_b, st_b = model.prefill(params, batch, pol8, max_len=40)
+    assert st_b.kv.k.dtype == jnp.int8
+    assert st_b.kv.k_scale is not None
+
+    def nbytes(t):
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(t))
+
+    assert nbytes(st_b.kv) < 0.5 * nbytes(st_a.kv)
+
+    tok = jnp.argmax(lg_a, axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(4):
+        lg_a, st_a = model.decode_step(params, tok, st_a, pol)
+        lg_b, st_b = model.decode_step(params, tok, st_b, pol8)
+        c = np.corrcoef(np.asarray(lg_a).ravel(),
+                        np.asarray(lg_b).ravel())[0, 1]
+        assert c > 0.999
+        assert bool((jnp.argmax(lg_a, -1) == jnp.argmax(lg_b, -1)).all())
+        tok = jnp.argmax(lg_a, axis=-1)[:, None].astype(jnp.int32)
+
+
+def test_int8_kv_cache_vector_positions(setup):
+    """int8 cache composes with per-slot positions (continuous batching)."""
+    cfg, model, params, batch = setup
+    pol8 = preset("w4a8_abfp").replace(kv_cache="int8")
+    _, state = model.prefill(params, batch, pol8, max_len=40)
+    B = batch["tokens"].shape[0]
+    pos = jnp.full((B,), int(state.position), jnp.int32)
+    state = state._replace(position=pos)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    lg, state2 = model.decode_step(params, tok, state, pol8)
+    assert np.isfinite(np.asarray(lg)).all()
+    assert state2.kv.k_scale.shape == state.kv.k_scale.shape
