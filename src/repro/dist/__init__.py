@@ -1,0 +1,13 @@
+"""Distributed-execution layer: logical-axis sharding rules + elastic restore.
+
+``repro.dist.sharding`` maps *logical* axis names (``batch``, ``embed``,
+``mlp``, ...) to physical mesh axes via a rule table; models annotate every
+parameter and activation with logical names only, so one rule table swap
+re-targets the whole stack (TP, FSDP, sequence-parallel, multi-pod).
+``repro.dist.elastic`` plans checkpoint-restore shardings onto an arbitrary
+mesh, replicating dims that don't divide evenly.
+"""
+
+from repro.dist import elastic, sharding
+
+__all__ = ["elastic", "sharding"]

@@ -1,0 +1,113 @@
+"""Elastic restore planning: shard a checkpoint onto *any* mesh.
+
+A checkpoint saved unsharded (or on a different mesh) restores onto the
+current mesh with shardings computed from the logical-axes tree + rule
+table.  jit *arguments* must divide their mesh axes exactly, so a dim that
+can't fill its assigned mesh axes keeps the greedy subset that divides
+evenly (``sharding.fit_axes`` — the same policy
+``launch.specs.fit_batch_rule`` applies to batch args) and replicates the
+rest — recorded per-dim in ``RestoreReport.fallbacks`` so the launcher can
+log exactly what degraded (e.g. ``d_ff=130`` on a 4-way ``model`` axis)
+instead of crashing the restore.
+
+``restore_specs`` is the pure planner (works with any object exposing
+``axis_names`` + ``devices.shape``, including test fakes);
+``shardings_for_restore`` wraps the plan into ``NamedSharding``s for
+``checkpoint.store.restore_pytree``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class Fallback:
+    """One dim that (partially) lost sharding, or a whole-leaf rank bailout."""
+
+    path: str
+    dim: int  # -1 for a rank-mismatch bailout of the whole leaf
+    logical: Any  # logical axis name (or axes tuple for dim == -1)
+    size: int  # dim size (or leaf rank for dim == -1)
+    ways: int  # shard count the dim could not divide into
+    kept: int = 1  # shard count actually retained (largest dividing prefix)
+
+
+@dataclasses.dataclass
+class RestoreReport:
+    n_params: int = 0  # leaves planned
+    n_sharded: int = 0  # leaves with at least one sharded dim
+    fallbacks: list = dataclasses.field(default_factory=list)
+
+    def summary(self) -> str:
+        return (
+            f"restore plan: {self.n_params} params, {self.n_sharded} sharded, "
+            f"{len(self.fallbacks)} replication fallbacks"
+        )
+
+
+def _entry_ways(entry, sizes: Mapping) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    return math.prod(sizes.get(a, 1) for a in names)
+
+
+def restore_specs(paxes, shape_structs, mesh, rules: Mapping):
+    """Pure planning: (PartitionSpec tree, RestoreReport).
+
+    ``paxes``: logical-axes tree (from ``nn.module.axes_of``);
+    ``shape_structs``: matching tree of ShapeDtypeStructs/arrays.
+    A ``None`` axes leaf means intentional full replication (unannotated
+    leaf) — not a fallback, matching ``launch.specs.shardings_from_axes``.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    report = RestoreReport()
+
+    def one(path, axes, sds):
+        report.n_params += 1
+        pstr = jax.tree_util.keystr(path)
+        shape = tuple(sds.shape)
+        if axes is None:
+            return P()
+        axes = tuple(axes)
+        if len(axes) != len(shape):
+            report.fallbacks.append(
+                Fallback(pstr, -1, axes, len(shape), 0))
+            return P()
+        # Two resolutions: the unfitted spec is the launch-time intent; the
+        # fitted one skips (without consuming) mesh axes a dim can't divide,
+        # so an axis a small dim strands is still claimable by a later dim.
+        intended = list(shd.spec_for(axes, rules=rules, mesh=mesh))
+        fitted = list(shd.spec_for(axes, rules=rules, mesh=mesh,
+                                   fit_shape=shape))
+        for d, n in enumerate(shape):
+            ways = _entry_ways(intended[d], sizes)
+            kept = _entry_ways(fitted[d], sizes)
+            if kept < ways:
+                report.fallbacks.append(
+                    Fallback(pstr, d, axes[d], n, ways, kept))
+        if any(e is not None for e in fitted):
+            report.n_sharded += 1
+        return P(*fitted)
+
+    specs = jax.tree_util.tree_map_with_path(
+        one, paxes, shape_structs, is_leaf=shd.is_axes_leaf)
+    return specs, report
+
+
+def shardings_for_restore(paxes, shape_structs, mesh, rules: Mapping):
+    """(NamedSharding tree, RestoreReport) for ``store.restore_pytree``."""
+    specs, report = restore_specs(paxes, shape_structs, mesh, rules)
+    shardings = jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    return shardings, report

@@ -1,0 +1,219 @@
+"""Logical-axis sharding rules (GSPMD partitioning by name, not position).
+
+Every parameter and activation in ``repro.nn``/``repro.models`` is annotated
+with *logical* axis names (``("batch", "seq_res", "embed")``); this module
+owns the table that maps those names onto physical mesh axes and the two
+entry points the rest of the stack uses:
+
+- ``spec_for(axes, rules=..., mesh=...)`` resolves a logical-axes tuple into
+  a ``PartitionSpec``, dropping mesh axes the current mesh doesn't have
+  (single-pod meshes have no ``"pod"``) and filtering duplicate physical-axis
+  use so each mesh axis appears at most once per spec (first dim wins).
+- ``constrain(x, axes)`` is the in-model sharding hint.  Outside a
+  ``use_rules`` context it is an exact no-op, so single-device tests and
+  eager debugging never pay for (or crash on) mesh machinery.
+
+Rule values are ``None`` (replicate), a mesh-axis name, or a tuple of
+mesh-axis names (the dim is sharded over their product, major-to-minor).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Default rule table (Megatron-style TP + sequence parallelism; DESIGN.md §4)
+# ---------------------------------------------------------------------------
+DEFAULT_RULES: dict = {
+    # data axes: batch over (pod, data); residual-stream sequence dim over
+    # 'model' (sequence parallelism — norms/residual adds are sharded, the
+    # TP all-reduce becomes reduce-scatter + all-gather pairs).
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_res": "model",
+    "kv_seq": None,
+    # replicated structural axes
+    "layers": None,
+    "embed": None,
+    "head_dim": None,
+    "conv_dim": None,
+    "mamba_groups": None,
+    "lora": None,
+    # tensor-parallel feature axes
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    # MoE: experts over 'model', expert-hidden over 'data' (2-D expert
+    # sharding; fits Llama4-Scout-scale expert tables)
+    "experts": "model",
+    "moe_mlp": "data",
+}
+
+
+# ---------------------------------------------------------------------------
+# Active (mesh, rules) context — arms `constrain`
+# ---------------------------------------------------------------------------
+class _Context(threading.local):
+    def __init__(self):
+        self.stack: list[tuple[Any, Mapping]] = []
+
+
+_CTX = _Context()
+
+
+def active() -> tuple[Any, Mapping] | None:
+    """The innermost (mesh, rules) armed by ``use_rules``, or None."""
+    return _CTX.stack[-1] if _CTX.stack else None
+
+
+@contextlib.contextmanager
+def use_rules(mesh, rules: Mapping):
+    """Arm ``constrain`` with a mesh + rule table for the enclosed trace.
+
+    Composes with (but does not replace) entering the mesh itself::
+
+        with mesh, shd.use_rules(mesh, rules):
+            jax.jit(step)(...)
+    """
+    _CTX.stack.append((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _CTX.stack.pop()
+
+
+# ---------------------------------------------------------------------------
+# Spec resolution
+# ---------------------------------------------------------------------------
+def is_axes_leaf(x) -> bool:
+    """A logical-axes leaf: None or a flat tuple of names/None.
+
+    State NamedTuples (KVCache etc.) are tuples too — they are containers,
+    not axes.  Shared by ``launch.specs`` and ``dist.elastic`` so the leaf
+    convention has exactly one definition.
+    """
+    return x is None or (
+        type(x) is tuple
+        and all(e is None or isinstance(e, str) for e in x)
+    )
+
+
+def _mesh_axis_names(mesh) -> tuple | None:
+    if mesh is None:
+        return None
+    return tuple(mesh.axis_names)
+
+
+def fit_axes(names: Sequence[str], n: int, sizes: Mapping[str, int]):
+    """Greedy subset of mesh ``names`` that ``n`` divides evenly.
+
+    jit arguments must divide their mesh axes exactly; axes the dim can't
+    fill are skipped (later axes are still considered), matching
+    ``launch.specs.fit_batch_rule``.  Axes absent from ``sizes`` are
+    skipped too.  Returns (kept_names, kept_product).
+    """
+    kept, prod = [], 1
+    for a in names:
+        if a not in sizes:
+            continue
+        if n % (prod * sizes[a]) == 0:
+            kept.append(a)
+            prod *= sizes[a]
+    return kept, prod
+
+
+def spec_for(axes: Sequence[str | None] | None, *, rules: Mapping | None = None,
+             mesh=None, fit_shape: Sequence[int] | None = None) -> P:
+    """Resolve logical ``axes`` to a ``PartitionSpec``.
+
+    - a ``None`` logical name resolves to a replicated dim;
+    - rule values may be a string (kept as a bare spec entry) or a tuple
+      (kept as a tuple entry, even when filtering leaves one element —
+      ``P(("data",),)`` and ``P("data")`` are distinct specs);
+    - physical axes absent from ``mesh.axis_names`` are silently dropped
+      (the same rule table serves single-pod and multi-pod meshes);
+    - each physical axis is used at most once per spec: a later dim that
+      maps to an already-used axis loses it (replicated instead);
+    - with ``fit_shape`` (the array's dims), a mesh axis the dim can't
+      divide evenly is skipped *without being consumed*, so a later dim
+      mapped to the same axis can still claim it (jit arguments must
+      divide exactly — see ``elastic.restore_specs``).
+    """
+    ctx = active()
+    if rules is None:
+        rules = ctx[1] if ctx is not None else DEFAULT_RULES
+    if mesh is None and ctx is not None:
+        mesh = ctx[0]
+    mesh_axes = _mesh_axis_names(mesh)
+
+    if axes is None:
+        axes = ()
+    sizes: Mapping[str, int] = {}
+    if fit_shape is not None:
+        if len(fit_shape) != len(axes):
+            raise ValueError(
+                f"spec_for: fit_shape {tuple(fit_shape)} rank != axes {axes}")
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries: list = []
+    used: set[str] = set()
+    for d, name in enumerate(axes):
+        rule = rules.get(name) if name is not None else None
+        if rule is None:
+            entries.append(None)
+            continue
+        as_tuple = not isinstance(rule, str)
+        phys = tuple(rule) if as_tuple else (rule,)
+        kept, prod = [], 1
+        for a in phys:
+            if mesh_axes is not None and a not in mesh_axes:
+                continue
+            if a in used:
+                continue
+            if fit_shape is not None:
+                size = sizes.get(a, 1)
+                if fit_shape[d] % (prod * size) != 0:
+                    continue
+                prod *= size
+            kept.append(a)
+            used.add(a)
+        if not kept:
+            entries.append(None)
+        elif as_tuple:
+            entries.append(tuple(kept))
+        else:
+            entries.append(kept[0])
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# In-model sharding hint
+# ---------------------------------------------------------------------------
+def constrain(x, axes: Sequence[str | None]):
+    """Apply a logical sharding constraint to ``x``.
+
+    No-op unless a ``use_rules(mesh, rules)`` context is active, so models
+    run unchanged on a single device and in unit tests.
+    """
+    ctx = active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    axes = tuple(axes)
+    if len(axes) != x.ndim:
+        raise ValueError(
+            f"constrain: rank mismatch — axes {axes} vs array rank {x.ndim} "
+            f"(shape {x.shape})"
+        )
+    spec = spec_for(axes, rules=rules, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

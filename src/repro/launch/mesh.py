@@ -8,23 +8,30 @@ any jax import; tests/benches see the real 1-CPU device).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types (Auto keeps GSPMD's behaviour)
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: meshes are implicitly Auto
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for CI-scale sharding tests (8 host-platform devices)."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return _make_mesh((n_data, n_model), ("data", "model"))
 
 
 # v5e hardware constants (roofline targets; see EXPERIMENTS.md §Roofline)

@@ -80,13 +80,7 @@ def fit_batch_rule(rules: dict, global_batch: int, mesh) -> dict:
         return rules
     axes = (phys,) if isinstance(phys, str) else tuple(phys)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    kept, prod = [], 1
-    for a in axes:
-        if a not in sizes:
-            continue
-        if global_batch % (prod * sizes[a]) == 0:
-            kept.append(a)
-            prod *= sizes[a]
+    kept, _ = shd.fit_axes(axes, global_batch, sizes)
     out = dict(rules)
     out["batch"] = tuple(kept) if kept else None
     return out
@@ -191,13 +185,10 @@ def eval_decode_state(model, cfg: ArchConfig, shape: ShapeSpec,
 # ---------------------------------------------------------------------------
 # Sharding assembly
 # ---------------------------------------------------------------------------
-def _is_axes(x) -> bool:
-    """An axes leaf is a plain tuple of axis names / None — NOT a NamedTuple
-    state container (KVCache etc. are tuples too)."""
-    return x is None or (
-        type(x) is tuple
-        and all(e is None or isinstance(e, str) for e in x)
-    )
+# An axes leaf is a plain tuple of axis names / None — NOT a NamedTuple
+# state container (KVCache etc. are tuples too). Single definition lives in
+# the sharding layer (dist.elastic shares it).
+_is_axes = shd.is_axes_leaf
 
 
 def shardings_from_axes(axes_tree, mesh, rules):

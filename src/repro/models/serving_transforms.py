@@ -139,11 +139,7 @@ def compress_axes(axes_tree, compressed_sds_tree):
     the compressed SDS tree so treedefs match exactly under jit.
     """
 
-    def _is_axes(x):
-        return x is None or (
-            type(x) is tuple
-            and all(e is None or isinstance(e, str) for e in x)
-        )
+    from repro.dist.sharding import is_axes_leaf as _is_axes
 
     def rec(ax_node, sds_node):
         if isinstance(sds_node, CompressedKernel):

@@ -5,6 +5,7 @@ Multi-device cases run in a SUBPROCESS with
 the single real CPU device (smoke tests depend on it)."""
 
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -59,6 +60,118 @@ def test_constrain_noop_outside_mesh():
     np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+# ------------------------------------------------------- elastic restore plan
+class _FakeMesh24:
+    """2x4 (data, model) mesh stand-in: planning is pure, no devices needed."""
+
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (2, 4)
+
+
+def test_restore_specs_replication_fallback():
+    from repro.dist.elastic import restore_specs
+
+    paxes = {
+        "wi": ("embed", "mlp"),  # d_ff=130 can't shard 4-way over 'model'
+        "wo": ("mlp", "embed"),
+        "bias": ("mlp",),
+    }
+    sds = {
+        "wi": jax.ShapeDtypeStruct((64, 130), np.float32),
+        "wo": jax.ShapeDtypeStruct((130, 64), np.float32),
+        "bias": jax.ShapeDtypeStruct((128,), np.float32),
+    }
+    rules = dict(shd.DEFAULT_RULES)
+    specs, report = restore_specs(paxes, sds, _FakeMesh24(), rules)
+    assert specs["wi"] == P(None, None)  # fell back
+    assert specs["wo"] == P(None, None)
+    assert specs["bias"] == P("model")  # 128 % 4 == 0: stays sharded
+    assert report.n_params == 3
+    assert report.n_sharded == 1
+    assert len(report.fallbacks) == 2
+    fb = {f.path: f for f in report.fallbacks}
+    assert fb["['wi']"].logical == "mlp"
+    assert fb["['wi']"].size == 130 and fb["['wi']"].ways == 4
+
+
+def test_restore_specs_rank_mismatch_bails_to_replicated():
+    from repro.dist.elastic import restore_specs
+
+    paxes = {"w": ("embed", "mlp")}
+    sds = {"w": jax.ShapeDtypeStruct((8,), np.float32)}  # rank 1 != 2
+    specs, report = restore_specs(paxes, sds, _FakeMesh24(),
+                                  dict(shd.DEFAULT_RULES))
+    assert specs["w"] == P()
+    assert len(report.fallbacks) == 1 and report.fallbacks[0].dim == -1
+    assert "1 replication fallbacks" in report.summary()
+
+
+def test_restore_specs_tuple_rule_keeps_dividing_subset():
+    """batch=6 divides data=2 but not (data, model)=8: keep the greedy
+    dividing subset (same fit_axes policy as launch.specs.fit_batch_rule)
+    and record the degradation."""
+    from repro.dist.elastic import restore_specs
+
+    rules = dict(shd.DEFAULT_RULES, batch=("data", "model"))
+    paxes = {"x": ("batch", "embed")}
+    sds = {"x": jax.ShapeDtypeStruct((6, 64), np.float32)}
+    specs, report = restore_specs(paxes, sds, _FakeMesh24(), rules)
+    assert specs["x"] == P(("data",), None)
+    fb = report.fallbacks[0]
+    assert fb.ways == 8 and fb.kept == 2
+
+
+def test_restore_specs_unfit_dim_releases_axis_to_later_dim():
+    """('experts', 'moe_mlp') both mapped to 'model': experts=6 can't divide
+    model=4, so the fit must *release* the axis for the big moe_mlp dim
+    instead of stranding it (first-dim-wins only applies among dims that
+    actually fit)."""
+    from repro.dist.elastic import restore_specs
+
+    rules = dict(shd.DEFAULT_RULES, moe_mlp="model")
+    paxes = {"wi": ("experts", "moe_mlp")}
+    sds = {"wi": jax.ShapeDtypeStruct((6, 1024), np.float32)}
+    specs, report = restore_specs(paxes, sds, _FakeMesh24(), rules)
+    assert specs["wi"] == P(None, "model")
+    assert len(report.fallbacks) == 1
+    fb = report.fallbacks[0]
+    assert fb.logical == "experts" and fb.ways == 4 and fb.kept == 1
+
+
+def test_restore_specs_none_axes_replicates_without_fallback():
+    """axes=None (unannotated leaf, axes_of convention) is intentional full
+    replication — no Fallback, matching launch.specs.shardings_from_axes."""
+    from repro.dist.elastic import restore_specs
+
+    paxes = {"w": None}
+    sds = {"w": jax.ShapeDtypeStruct((4, 4), np.float32)}
+    specs, report = restore_specs(paxes, sds, _FakeMesh24(),
+                                  dict(shd.DEFAULT_RULES))
+    assert specs["w"] == P()
+    assert report.n_params == 1 and not report.fallbacks
+
+
+def test_shardings_for_restore_real_mesh_roundtrip(tmp_path):
+    """End-to-end on the real single-device mesh: plan, save, restore."""
+    from repro.checkpoint import store
+    from repro.dist.elastic import shardings_for_restore
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = {"wi": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    paxes = {"wi": ("embed", "mlp")}
+    store.save_pytree(str(tmp_path), 0, params)
+    store.mark_committed(str(tmp_path), 0)
+    sds = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    sh, report = shardings_for_restore(paxes, sds, mesh,
+                                       dict(shd.DEFAULT_RULES))
+    assert report.n_params == 1 and not report.fallbacks
+    restored = store.restore_pytree(str(tmp_path), 0, sds, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["wi"]), params["wi"])
+
+
 # --------------------------------------------------------- subprocess harness
 def run_in_devices(code: str, n: int = 8) -> dict:
     prog = textwrap.dedent(f"""
@@ -71,11 +184,15 @@ def run_in_devices(code: str, n: int = 8) -> dict:
         {textwrap.indent(textwrap.dedent(code), '        ').strip()}
         print("RESULT:" + json.dumps(result))
     """)
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     out = subprocess.run(
         [sys.executable, "-c", prog], capture_output=True, text=True,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
-        cwd="/root/repo", timeout=600,
+             "HOME": os.environ.get("HOME", "/tmp"),
+             # forced host-platform devices are a CPU feature; without this
+             # a libtpu wheel in the image hijacks (and stalls) backend init
+             "JAX_PLATFORMS": "cpu"},
+        cwd=repo_root, timeout=600,
     )
     assert out.returncode == 0, out.stderr[-3000:]
     line = [l for l in out.stdout.splitlines() if l.startswith("RESULT:")][-1]
@@ -122,7 +239,10 @@ def test_train_step_shards_on_debug_mesh():
         with mesh, shd.use_rules(mesh, rules):
             p2, o2, m = jax.jit(step)(params, ost, batch)
         wi = p2["blocks"]["ffn"]["wi"]["kernel"]
-        n_shards = len({s.index for s in wi.addressable_shards})
+        # slice objects are only hashable on py3.12+; key on their bounds
+        n_shards = len({
+            tuple((sl.start, sl.stop) for sl in s.index)
+            for s in wi.addressable_shards})
         result = {"loss": float(m["loss"]), "wi_shards": n_shards}
     """)
     assert np.isfinite(result["loss"])
@@ -136,17 +256,23 @@ def test_gradient_compression_pod_allreduce():
     result = run_in_devices("""
         from functools import partial
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        try:  # jax >= 0.6
+            from jax import shard_map
+            _sm_kw = {"check_vma": False}
+        except ImportError:  # jax 0.4.x
+            from jax.experimental.shard_map import shard_map
+            _sm_kw = {"check_rep": False}
         from repro.optim.compression import compressed_psum_pod
 
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        # plain make_mesh: axis_types defaults to Auto on jax >= 0.5 and
+        # doesn't exist on 0.4.x
+        mesh = jax.make_mesh((2, 4), ("pod", "data"))
         g = jax.random.normal(jax.random.PRNGKey(0), (2, 256))
         e0 = jnp.zeros((1, 256))
 
         @partial(shard_map, mesh=mesh,
                  in_specs=(P("pod"), P()), out_specs=(P(), P("pod")),
-                 check_vma=False)
+                 **_sm_kw)
         def run(gl, el):
             red, enew = compressed_psum_pod(gl[0], el[0], mesh)
             return red[None] / 1.0, enew[None]
