@@ -24,6 +24,7 @@ from repro.checkpoint import store
 from repro.configs import get_config
 from repro.core.policy import QuantPolicy, preset
 from repro.data.corpus import synthetic_corpus
+from repro.data.images import ImageLoader, eval_image_batches, synthetic_images
 from repro.data.loader import LMLoader, eval_batches
 from repro.models import build_model
 from repro.models import quant_transforms as qt
@@ -115,11 +116,15 @@ def proxy_config(name: str):
     return cfg.replace(name=name + "-proxy")
 
 
-def train_proxy(name: str, steps: int = 500, seed: int = 0,
-                batch: int = 8, force: bool = False):
-    """Train (or load cached) proxy; returns (cfg, model, params, meta)."""
-    cfg = proxy_config(name)
-    model = build_model(cfg)
+def _train_cached(name: str, cfg, model, make_loader, steps: int, seed: int,
+                  batch: int, force: bool):
+    """Shared proxy-training scaffold: checkpoint-restore or train+save.
+
+    ``make_loader`` is called only on cache miss and must return an object
+    with ``batch_at(step) -> batch dict`` (AdaptedLoader / ImageLoader).
+    One copy of the cache-dir naming, restore, optimizer and loop contract
+    serves both the LM and the ViT benchmark paths.
+    """
     ckdir = os.path.join(ART, "models", f"{name}_s{steps}_b{batch}_{seed}")
     params0 = unbox(model.init(jax.random.PRNGKey(seed)))
     if not force and store.list_steps(ckdir):
@@ -129,8 +134,7 @@ def train_proxy(name: str, steps: int = 500, seed: int = 0,
         meta = store.load_metadata(ckdir, step)
         return cfg, model, params, meta
 
-    stream, _ = split(corpus())
-    loader = LMLoader(stream, seq_len=SEQ, global_batch=batch, seed=seed)
+    loader = make_loader()
     opt = AdamW(lr=warmup_cosine(3e-3, min(50, steps // 10), steps),
                 weight_decay=0.01)
     ost = opt.init(params0)
@@ -140,13 +144,27 @@ def train_proxy(name: str, steps: int = 500, seed: int = 0,
     params = params0
     loss = float("nan")
     for s in range(steps):
-        params, ost, m = step_fn(params, ost,
-                                 adapt_batch(cfg, loader.batch_at(s), s))
+        params, ost, m = step_fn(params, ost, loader.batch_at(s))
         loss = float(m["loss"])
     meta = {"final_train_loss": loss, "steps": steps}
     store.save_pytree(ckdir, steps, params, metadata=meta)
     store.mark_committed(ckdir, steps)
     return cfg, model, params, meta
+
+
+def train_proxy(name: str, steps: int = 500, seed: int = 0,
+                batch: int = 8, force: bool = False):
+    """Train (or load cached) proxy; returns (cfg, model, params, meta)."""
+    cfg = proxy_config(name)
+    model = build_model(cfg)
+
+    def make_loader():
+        stream, _ = split(corpus())
+        return AdaptedLoader(cfg, LMLoader(stream, seq_len=SEQ,
+                                           global_batch=batch, seed=seed))
+
+    return _train_cached(name, cfg, model, make_loader, steps, seed, batch,
+                         force)
 
 
 def finetune_qat(model, params, policy: QuantPolicy, steps: int = 60,
@@ -189,6 +207,112 @@ def eval_ppl(model, params, policy: QuantPolicy, q=None,
         else:
             losses.append(float(model.loss(params, b, policy, q=q)[0]))
     return float(np.exp(np.mean(losses)))
+
+
+# ------------------------------------------------------------ vision eval
+# ViT proxies follow the same methodology as the OPT proxies: trained
+# in-framework on a deterministic synthetic dataset; tables assert the
+# ordering/closeness of methods (top-1 here, PPL for LMs), not absolutes.
+N_TRAIN_IMAGES = 4096
+N_EVAL_IMAGES = 1024
+
+_image_cache = {}
+
+
+def image_data(cfg, seed: int = 0, noise: float = 1.8,
+               outlier_frac: float = 0.002, outlier_scale: float = 20.0):
+    """(train_images, train_labels, eval_images, eval_labels), cached.
+
+    Every generation parameter — config dims, split sizes AND the
+    difficulty knobs — is part of the cache key/filename, so tuning any of
+    them regenerates instead of silently serving stale arrays.
+    """
+    gen = (cfg.image_size, cfg.n_channels, cfg.n_classes, seed,
+           noise, outlier_frac, outlier_scale)
+    if gen not in _image_cache:
+        path = os.path.join(
+            ART,
+            f"images_{cfg.image_size}x{cfg.n_channels}_{cfg.n_classes}c"
+            f"_n{noise}_of{outlier_frac}_os{outlier_scale}"
+            f"_{N_TRAIN_IMAGES}+{N_EVAL_IMAGES}_{seed}.npz")
+        if os.path.exists(path):
+            z = np.load(path)
+            _image_cache[gen] = (z["xtr"], z["ytr"], z["xev"], z["yev"])
+        else:
+            n = N_TRAIN_IMAGES + N_EVAL_IMAGES
+            x, y = synthetic_images(
+                n, image_size=cfg.image_size, n_channels=cfg.n_channels,
+                n_classes=cfg.n_classes, seed=seed, noise=noise,
+                outlier_frac=outlier_frac, outlier_scale=outlier_scale)
+            xtr, ytr = x[:N_TRAIN_IMAGES], y[:N_TRAIN_IMAGES]
+            xev, yev = x[N_TRAIN_IMAGES:], y[N_TRAIN_IMAGES:]
+            os.makedirs(ART, exist_ok=True)
+            np.savez(path, xtr=xtr, ytr=ytr, xev=xev, yev=yev)
+            _image_cache[gen] = (xtr, ytr, xev, yev)
+    return _image_cache[gen]
+
+
+def vit_proxy_config(name: str):
+    """Reduced ViT/DeiT proxies (eager-unrolled for calibration taps)."""
+    if name == "vit-proxy-s":
+        return get_config("vit-b16").reduced().replace(
+            name=name, scan_layers=False)
+    if name == "deit-proxy-s":
+        # differentiated dims so the table has two genuinely distinct models
+        return get_config("deit-s16").reduced().replace(
+            name=name, n_layers=3, d_model=96, n_heads=6, n_kv=6,
+            head_dim=16, d_ff=192, scan_layers=False)
+    raise ValueError(name)
+
+
+def train_vit_proxy(name: str, steps: int = 500, seed: int = 0,
+                    batch: int = 32, force: bool = False):
+    """Train (or load cached) ViT proxy; returns (cfg, model, params, meta)."""
+    cfg = vit_proxy_config(name)
+    model = build_model(cfg)
+
+    def make_loader():
+        xtr, ytr, _, _ = image_data(cfg)
+        return ImageLoader(xtr, ytr, global_batch=batch, seed=seed)
+
+    return _train_cached(name, cfg, model, make_loader, steps, seed, batch,
+                         force)
+
+
+def eval_top1(model, params, policy: QuantPolicy, q=None,
+              max_batches: int = 16, batch: int = 64) -> float:
+    """Held-out top-1 accuracy under ``policy`` (+ optional static q tree)."""
+    _, _, xev, yev = image_data(model.cfg)
+    correct = total = 0
+    logits_fn = jax.jit(
+        lambda p, b: model.apply(p, b, policy)[0]
+    ) if q is None else None
+    for b in eval_image_batches(xev, yev, batch, max_batches=max_batches):
+        if logits_fn is not None:
+            logits = logits_fn(params, b)
+        else:
+            logits = model.apply(params, b, policy, q=q)[0]
+        pred = np.asarray(jnp.argmax(logits, axis=-1))
+        correct += int((pred == b["labels"]).sum())
+        total += len(b["labels"])
+    return correct / max(total, 1)
+
+
+_vit_calib_cache = {}
+
+
+def calibrated_vit(name, model, params, *, n_batches: int = 4,
+                   batch: int = 16):
+    """Calibration pass over training images (cached per model identity)."""
+    key = (name, id(params))
+    if key not in _vit_calib_cache:
+        xtr, ytr, _, _ = image_data(model.cfg)
+        loader = ImageLoader(xtr, ytr, global_batch=batch, seed=77)
+        batches = [loader.batch_at(i) for i in range(n_batches)]
+        _vit_calib_cache[key] = qt.calibrate(
+            model, params, batches, preset("w4a8_mse")
+        )
+    return _vit_calib_cache[key]
 
 
 # ------------------------------------------------------------- calibration

@@ -258,6 +258,43 @@ def table10(rep: C.Report, steps: int):
                   f"fp={fp:.2f} w4a8={w4a8:.2f} w4a4={w4a4:.2f}")
 
 
+# --------------------------------------------------------------- ViT table
+VIT_MODELS = ["vit-proxy-s", "deit-proxy-s"]
+
+
+def vit_table(rep: C.Report, steps: int):
+    """Paper §III vision rows (ViT/DeiT): top-1 under W4A4 policies.
+
+    Claims (qualitative, as in the paper's Tables II/III vision rows):
+      * ABFP W4A4 stays near the fp32 baseline while static-MSE calibration
+        degrades — the outlier-driven gap that motivates per-vector scaling.
+      * E1M2 tracks INT4 under ABFP (near-uniform grid), with E2M1 reported
+        alongside for the format-ordering comparison.
+    """
+    for name in VIT_MODELS:
+        cfg, model, params, _ = C.train_vit_proxy(name, steps)
+        fp = C.eval_top1(model, params, preset("fp32"))
+        abfp = C.eval_top1(model, params, preset("w4a4_abfp"))
+        w4a8 = C.eval_top1(model, params, preset("w4a8_abfp"))
+        calib = C.calibrated_vit(name, model, params)
+        q = qt.static_qtree(calib, INT4, cfg.n_layers, method="mse")
+        mse = C.eval_top1(model, params, preset("w4a4_mse"), q=q)
+        e2m1 = C.eval_top1(model, params, preset("w4a4_e2m1"))
+        e1m2 = C.eval_top1(model, params, preset("w4a4_e1m2"))
+        rep.row("vit_table", model=name, fp32=round(fp, 4),
+                abfp_w4a4=round(abfp, 4), abfp_w4a8=round(w4a8, 4),
+                mse_w4a4=round(mse, 4), e2m1=round(e2m1, 4),
+                e1m2=round(e1m2, 4))
+        rep.claim("vit_table",
+                  f"{name}: W4A4-ABFP near fp32; static-MSE degrades",
+                  abfp >= fp - 0.10 and mse < abfp - 0.02,
+                  f"fp={fp:.3f} abfp={abfp:.3f} mse={mse:.3f}")
+        rep.claim("vit_table",
+                  f"{name}: E1M2 ~ INT4 under ABFP (near-uniform grid)",
+                  abs(e1m2 - abfp) <= 0.10,
+                  f"int4={abfp:.3f} e1m2={e1m2:.3f} e2m1={e2m1:.3f}")
+
+
 # ------------------------------------------------- beyond-paper ablations
 def output_quant(rep: C.Report, steps: int):
     """Paper §III supports output quantizers (f_q^y, eqn (9)) 'for alternate
@@ -305,5 +342,6 @@ ALL = {
     "table1": table1, "table2": table2, "table3": table3, "table4": table4,
     "table5": table5, "table6": table6, "table7": table7, "table8": table8,
     "fig3": fig3, "fig45": fig45, "table10": table10,
+    "vit_table": vit_table,
     "output_quant": output_quant, "int8_native": int8_native,
 }

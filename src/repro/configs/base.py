@@ -82,6 +82,13 @@ class ArchConfig:
     # --- vlm (internvl2 backbone) ---------------------------------------------
     vision_patches: int = 0  # stub patch-embedding count prepended to seq
 
+    # --- vit (image classification) -------------------------------------------
+    image_size: int = 0  # >0 enables the ViT classification family
+    patch_size: int = 16
+    n_channels: int = 3
+    n_classes: int = 0
+    pool: str = "cls"  # 'cls' token readout | 'mean' pooling
+
     # --- execution -------------------------------------------------------------
     dtype: str = "float32"
     param_dtype: str = "float32"
@@ -108,6 +115,15 @@ class ArchConfig:
     def is_attention_free(self) -> bool:
         return self.ssm_state > 0 and self.shared_attn_every == 0
 
+    @property
+    def n_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def vit_seq_len(self) -> int:
+        """Encoder sequence length: patches (+ cls token)."""
+        return self.n_patches + (1 if self.pool == "cls" else 0)
+
     def n_params(self) -> int:
         """Analytic parameter count (embeddings included once if tied)."""
         d, f, L = self.d_model, self.d_ff, self.n_layers
@@ -115,6 +131,12 @@ class ArchConfig:
         attn = d * hd * (self.n_heads + 2 * self.n_kv) + self.n_heads * hd * d
         glu = 3 if self.act in ("swiglu", "geglu", "reglu") else 2
         mlp = glu * d * f
+        if self.family == "vit":
+            patch = (self.patch_size**2 * self.n_channels + 1) * d
+            pos = self.vit_seq_len * d + (d if self.pool == "cls" else 0)
+            # padded head, matching the built model (cf. vocab_padded)
+            head = (d + 1) * pad_to(self.n_classes, 128)
+            return L * (attn + mlp) + patch + pos + head
         if self.family == "moe":
             mlp = mlp * self.n_experts + d * self.n_experts
         ssm = 0
@@ -189,6 +211,11 @@ class ArchConfig:
             kw["encoder_layers"] = 2
         if self.family == "vlm":
             kw["vision_patches"] = 8
+        if self.family == "vit":
+            # 32x32 images in 8x8 patches -> 16-token encoder, 10 classes
+            kw["image_size"] = 32
+            kw["patch_size"] = 8
+            kw["n_classes"] = min(self.n_classes or 10, 10)
         return dataclasses.replace(self, **kw)
 
     def replace(self, **kw) -> "ArchConfig":

@@ -17,6 +17,9 @@ _ARCHS = {
     "whisper-large-v3": "repro.configs.whisper_large_v3",
     "internvl2-2b": "repro.configs.internvl2_2b",
     "mamba2-130m": "repro.configs.mamba2_130m",
+    # the paper's vision-transformer family (§III ViT/DeiT tables)
+    "vit-b16": "repro.configs.vit_b16",
+    "deit-s16": "repro.configs.deit_s16",
     # the paper's own model family (benchmarks)
     "opt-125m": "repro.configs.opt",
     "opt-tiny": "repro.configs.opt",

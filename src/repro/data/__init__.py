@@ -1,13 +1,17 @@
-"""Data pipeline: tokenizer, corpora, deterministic sharded loader."""
+"""Data pipeline: tokenizer, corpora, images, deterministic loaders."""
 
 from repro.data.tokenizer import ByteTokenizer
 from repro.data.corpus import synthetic_corpus, text_corpus
+from repro.data.images import ImageLoader, eval_image_batches, synthetic_images
 from repro.data.loader import LMLoader, LoaderState
 
 __all__ = [
     "ByteTokenizer",
     "synthetic_corpus",
     "text_corpus",
+    "synthetic_images",
+    "ImageLoader",
+    "eval_image_batches",
     "LMLoader",
     "LoaderState",
 ]

@@ -44,7 +44,7 @@ from repro.train.step import TrainStepConfig, make_train_step
 ASSIGNED = [
     "h2o-danube-1.8b", "granite-3-8b", "gemma2-9b", "qwen2-7b", "zamba2-7b",
     "phi3.5-moe-42b-a6.6b", "llama4-scout-17b-a16e", "whisper-large-v3",
-    "internvl2-2b", "mamba2-130m",
+    "internvl2-2b", "mamba2-130m", "vit-b16", "deit-s16",
 ]
 
 
@@ -66,7 +66,7 @@ def build_cell(cfg: ArchConfig, shape: ShapeSpec, policy: QuantPolicy,
             lambda p: st.compress_weights(p, base_policy), params_sds)
         params_axes = st.compress_axes(params_axes, params_sds)
         policy = st.serving_policy(policy)
-    params_sh = sp.shardings_from_axes(params_axes, mesh, rules)
+    params_sh = sp.shardings_from_axes(params_axes, mesh, rules, params_sds)
 
     if shape.kind == "train":
         opt = AdamW(lr=1e-4, weight_decay=0.1)
@@ -89,9 +89,14 @@ def build_cell(cfg: ArchConfig, shape: ShapeSpec, policy: QuantPolicy,
         batch_sds, batch_axes = sp.batch_specs(cfg, shape)
         batch_sh = sp.shardings_from_axes(batch_axes, mesh, rules)
 
-        def fn(params, batch):
-            return model.prefill(params, batch, policy,
-                                 max_len=shape.seq_len)
+        if cfg.family == "vit":
+            # encoder-only classifier: 'prefill' is a plain batched forward
+            def fn(params, batch):
+                return model.apply(params, batch, policy)
+        else:
+            def fn(params, batch):
+                return model.prefill(params, batch, policy,
+                                     max_len=shape.seq_len)
 
         args = (params_sds, batch_sds)
         in_sh = (params_sh, batch_sh)
@@ -101,7 +106,7 @@ def build_cell(cfg: ArchConfig, shape: ShapeSpec, policy: QuantPolicy,
         state_sds = sp.eval_decode_state(
             model, cfg, shape, kv_quant=(policy.kv_cache == "int8"))
         state_axes = sp.decode_state_axes(cfg, state_sds)
-        state_sh = sp.shardings_from_axes(state_axes, mesh, rules)
+        state_sh = sp.shardings_from_axes(state_axes, mesh, rules, state_sds)
         tok_sds, tok_axes = sp.token_spec(cfg, shape.global_batch)
         tok_sh = sp.shardings_from_axes(tok_axes, mesh, rules)
 

@@ -170,7 +170,13 @@ def roofline_terms(flops: float, bytes_accessed: float,
 def model_flops(cfg, shape, chips: int) -> float:
     """Analytic 6·N·D (train) / 2·N·D (inference fwd), per chip."""
     n = cfg.n_active_params() if cfg.family == "moe" else cfg.n_params()
-    if shape.kind == "train":
+    if cfg.family == "vit" and shape.kind in ("train", "prefill"):
+        # encoder length is fixed by the image grid, not the shape's seq_len
+        # (decode kinds fall through to the generic one-token convention;
+        # vit configs skip them, but callers may not consult skip_shapes)
+        tokens = shape.global_batch * cfg.vit_seq_len
+        total = (6.0 if shape.kind == "train" else 2.0) * n * tokens
+    elif shape.kind == "train":
         tokens = shape.global_batch * shape.seq_len
         total = 6.0 * n * tokens
     elif shape.kind == "prefill":

@@ -37,6 +37,10 @@ def main() -> int:
     from repro.serve.engine import Request, ServeEngine
 
     cfg = get_config(args.arch)
+    if cfg.family == "vit":
+        raise SystemExit(
+            f"{args.arch} is an encoder-only classifier: nothing to "
+            "decode. Use `python -m benchmarks.run --only vit_table`.")
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)

@@ -94,6 +94,16 @@ def batch_specs(cfg: ArchConfig, shape: ShapeSpec):
     B, S = shape.global_batch, shape.seq_len
     i32, dt = jnp.int32, jnp.dtype(cfg.dtype)
     sds, axes = {}, {}
+    if cfg.family == "vit":
+        # classification batches: the encoder length is fixed by the image
+        # grid (cfg.vit_seq_len); the shape grid contributes the batch size.
+        sds["images"] = jax.ShapeDtypeStruct(
+            (B, cfg.image_size, cfg.image_size, cfg.n_channels), dt)
+        axes["images"] = ("batch", None, None, None)
+        if shape.kind == "train":
+            sds["labels"] = jax.ShapeDtypeStruct((B,), i32)
+            axes["labels"] = ("batch",)
+        return sds, axes
     tok_len = S
     if cfg.family == "vlm":
         tok_len = S - cfg.vision_patches
@@ -191,12 +201,24 @@ def eval_decode_state(model, cfg: ArchConfig, shape: ShapeSpec,
 _is_axes = shd.is_axes_leaf
 
 
-def shardings_from_axes(axes_tree, mesh, rules):
-    def one(axes):
+def shardings_from_axes(axes_tree, mesh, rules, sds_tree=None):
+    """Axes tree -> NamedSharding tree.
+
+    With ``sds_tree`` (matching ShapeDtypeStructs), each leaf's spec is
+    size-fitted: mesh axes a dim can't divide evenly are skipped, falling
+    back toward replication (``spec_for(fit_shape=...)``).  jit *arguments*
+    must divide exactly, and feature dims don't always fill the mesh — e.g.
+    DeiT's 384-wide qkv bias on a 256-way (data, model) FSDP sharding.
+    """
+    def one(axes, sds=None):
         if axes is None:
             return NamedSharding(mesh, shd.spec_for((), rules=rules,
                                                     mesh=mesh))
-        return NamedSharding(mesh,
-                             shd.spec_for(axes, rules=rules, mesh=mesh))
+        return NamedSharding(mesh, shd.spec_for(
+            axes, rules=rules, mesh=mesh,
+            fit_shape=None if sds is None else sds.shape))
 
-    return jax.tree_util.tree_map(one, axes_tree, is_leaf=_is_axes)
+    if sds_tree is None:
+        return jax.tree_util.tree_map(one, axes_tree, is_leaf=_is_axes)
+    return jax.tree_util.tree_map(one, axes_tree, sds_tree,
+                                  is_leaf=_is_axes)

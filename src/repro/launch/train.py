@@ -63,6 +63,11 @@ def make_everything(args):
     from repro.train.step import TrainStepConfig, make_train_step
 
     cfg = get_config(args.arch)
+    if cfg.family == "vit":
+        raise SystemExit(
+            f"{args.arch} is an image classifier; this launcher drives "
+            "token-LM training. Use `python -m benchmarks.run --only "
+            "vit_table` for the ViT workload.")
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)

@@ -1,4 +1,5 @@
-"""Model zoo: decoder LM, hybrid (zamba2), enc-dec (whisper), VLM, SSM."""
+"""Model zoo: decoder LM, hybrid (zamba2), enc-dec (whisper), VLM, SSM,
+ViT classifiers (vit-b16 / deit-s16)."""
 
 from repro.models.registry import build_model
 

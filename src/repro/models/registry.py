@@ -93,7 +93,11 @@ class Model:
         return self.inner.init_decode_state(batch, max_len, **kw)
 
 
-def build_model(cfg: ArchConfig) -> Model:
+def build_model(cfg: ArchConfig):
+    if cfg.family == "vit":
+        from repro.models.vit import VisionTransformer, VitModel
+
+        return VitModel(cfg, VisionTransformer(cfg))
     if cfg.family == "hybrid":
         return Model(cfg, HybridLM(cfg))
     if cfg.family == "encdec":

@@ -1,0 +1,229 @@
+"""Vision-transformer classifier (ViT/DeiT) with the INT-FP-QSim policy
+threaded through every contraction.
+
+The paper's second domain (§III, ViT/DeiT W4A4/W4A8 tables): a pre-LN
+encoder over non-overlapping image patches with a cls-token (or mean-pool)
+classification head.  Everything reuses the LM building blocks — the patch
+projection is ``nn.patch_embed`` (conv-as-matmul through ``qmatmul``),
+blocks are ``nn.attention`` (bidirectional: ``causal=False``, no RoPE,
+learned position embeddings) + ``nn.ffn``, and the head is a quantized
+``nn.linear.Dense``.
+
+Calibration contract: the block naming matches TransformerLM
+(``blocks.{i}/attn/...``, ``blocks.{i}/ffn/...``) so the PTQ drivers in
+``models.quant_transforms`` (static MSE trees, SmoothQuant, GPTQ, RPTQ)
+apply to the encoder unchanged — run eager with ``scan_layers=False``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, pad_to
+from repro.core.policy import QuantPolicy
+from repro.dist import sharding as shd
+from repro.nn.attention import Attention
+from repro.nn.ffn import MLP
+from repro.nn.linear import Dense
+from repro.nn.module import Box, stack_init, truncated_normal
+from repro.nn.norms import LayerNorm, RMSNorm
+from repro.nn.patch_embed import PatchEmbed
+
+NEG_INF = -1e9
+
+
+def _norm(cfg: ArchConfig):
+    if cfg.norm == "ln":
+        return LayerNorm(cfg.d_model, param_dtype=cfg.param_dtype,
+                         dtype=cfg.dtype)
+    return RMSNorm(cfg.d_model, plus_one=cfg.norm_plus_one,
+                   param_dtype=cfg.param_dtype, dtype=cfg.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionTransformer:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------ builders
+    @property
+    def seq_len(self) -> int:
+        return self.cfg.vit_seq_len
+
+    @property
+    def n_classes_padded(self) -> int:
+        # pad like the vocab so the head kernel divides the model axis
+        return pad_to(self.cfg.n_classes, 128)
+
+    def _patch_embed(self) -> PatchEmbed:
+        c = self.cfg
+        return PatchEmbed(
+            image_size=c.image_size, patch_size=c.patch_size,
+            n_channels=c.n_channels, d_model=c.d_model,
+            param_dtype=c.param_dtype, dtype=c.dtype, name="patch_embed",
+        )
+
+    def _attention(self, name: str = "attn") -> Attention:
+        c = self.cfg
+        return Attention(
+            d_model=c.d_model, n_heads=c.n_heads, n_kv=c.n_kv,
+            head_dim=c.head_dim_, qkv_bias=c.qkv_bias, causal=False,
+            use_rope=False, softcap=c.attn_softcap,
+            param_dtype=c.param_dtype, dtype=c.dtype,
+            q_block=c.q_block, kv_block=c.kv_block, name=name,
+        )
+
+    def _mlp(self, name: str = "ffn") -> MLP:
+        c = self.cfg
+        return MLP(c.d_model, c.d_ff, act=c.act, param_dtype=c.param_dtype,
+                   dtype=c.dtype, name=name)
+
+    def _head(self) -> Dense:
+        c = self.cfg
+        return Dense(
+            c.d_model, self.n_classes_padded, use_bias=True,
+            in_axis="embed", out_axis="vocab",
+            param_dtype=c.param_dtype, dtype=c.dtype, name="head",
+        )
+
+    # ----------------------------------------------------------------- init
+    def _block_init(self, key) -> dict:
+        c = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "ln1": _norm(c).init(k1),
+            "attn": self._attention().init(k2),
+            "ln2": _norm(c).init(k3),
+            "ffn": self._mlp().init(k4),
+        }
+
+    def init(self, key) -> dict:
+        c = self.cfg
+        kP, kB, kN, kH, kE, kC = jax.random.split(key, 6)
+        params: dict = {
+            "patch_embed": self._patch_embed().init(kP),
+            "pos_embed": Box(
+                truncated_normal(kE, (self.seq_len, c.d_model),
+                                 jnp.dtype(c.param_dtype), 0.02),
+                ("seq", "embed"),
+            ),
+            "final_norm": _norm(c).init(kN),
+            "head": self._head().init(kH),
+        }
+        if c.pool == "cls":
+            params["cls"] = Box(
+                truncated_normal(kC, (c.d_model,),
+                                 jnp.dtype(c.param_dtype), 0.02),
+                ("embed",),
+            )
+        if c.scan_layers:
+            params["blocks"] = stack_init(self._block_init, kB, c.n_layers)
+        else:
+            bkeys = jax.random.split(kB, c.n_layers)
+            params["blocks"] = [self._block_init(k) for k in bkeys]
+        return params
+
+    # --------------------------------------------------------------- blocks
+    def _block_apply(self, bparams, x, positions, policy, q=None,
+                     name="block"):
+        c = self.cfg
+        getq = (lambda k: None) if q is None else q.get
+        h = _norm(c).apply(bparams["ln1"], x)
+        h = self._attention(f"{name}/attn").apply(
+            bparams["attn"], h, positions=positions, policy=policy,
+            q=getq("attn"),
+        )
+        x = x + h
+        h = _norm(c).apply(bparams["ln2"], x)
+        h = self._mlp(f"{name}/ffn").apply(bparams["ffn"], h, policy,
+                                           q=getq("ffn"))
+        return x + h
+
+    def _run_blocks(self, params, x, positions, policy, q=None):
+        c = self.cfg
+        if c.scan_layers:
+            def body(xc, xs):
+                if q is None:
+                    bp, qs = xs, None
+                else:
+                    bp, qs = xs
+                return self._block_apply(bp, xc, positions, policy, qs), None
+
+            if c.remat != "none":
+                body = jax.checkpoint(body)
+            xs = params["blocks"] if q is None else (params["blocks"],
+                                                     q["blocks"])
+            x, _ = jax.lax.scan(body, x, xs)
+            return x
+        for i, bp in enumerate(params["blocks"]):
+            qi = None if q is None else q["blocks"][i]
+            x = self._block_apply(bp, x, positions, policy, qi,
+                                  name=f"blocks.{i}")
+        return x
+
+    # ---------------------------------------------------------------- apply
+    def apply(self, params, images, *, policy=QuantPolicy(), q=None,
+              return_hidden: bool = False):
+        """images (B, H, W, C) -> (logits (B, n_classes_padded), aux)."""
+        c = self.cfg
+        getq = (lambda k: None) if q is None else q.get
+        x = self._patch_embed().apply(params["patch_embed"], images, policy,
+                                      q=getq("patch_embed"))
+        B = x.shape[0]
+        if c.pool == "cls":
+            cls = jnp.broadcast_to(
+                params["cls"].astype(x.dtype)[None, None], (B, 1, c.d_model)
+            )
+            x = jnp.concatenate([cls, x], axis=1)
+        S = x.shape[1]
+        x = x + params["pos_embed"][:S].astype(x.dtype)[None]
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S)
+        )
+        x = shd.constrain(x, ("batch", "seq_res", "embed"))
+        x = self._run_blocks(params, x, positions, policy, q)
+        x = _norm(c).apply(params["final_norm"], x)
+        if return_hidden:
+            return x, jnp.zeros((), jnp.float32)
+        pooled = x[:, 0] if c.pool == "cls" else x.mean(axis=1)
+        logits = self._head().apply(params["head"], pooled, policy,
+                                    q=getq("head"))
+        if self.n_classes_padded != c.n_classes:
+            pad_mask = jnp.arange(self.n_classes_padded) >= c.n_classes
+            logits = jnp.where(pad_mask, NEG_INF, logits)
+        return logits, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Facade (the `build_model` interface subset that applies to classifiers)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class VitModel:
+    """Uniform facade: batch dicts carry 'images' (B,H,W,C) + 'labels' (B,)."""
+
+    cfg: ArchConfig
+    inner: VisionTransformer
+
+    def init(self, key):
+        return self.inner.init(key)
+
+    def apply(self, params, batch, policy=QuantPolicy(), q=None,
+              return_hidden=False):
+        return self.inner.apply(params, batch["images"], policy=policy, q=q,
+                                return_hidden=return_hidden)
+
+    def loss(self, params, batch, policy=QuantPolicy(), q=None):
+        """Softmax CE over classes + top-1 accuracy metric."""
+        logits, aux = self.apply(params, batch, policy, q)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), labels[:, None], axis=-1
+        )[:, 0]
+        ce = jnp.mean(logz - gold)
+        acc = jnp.mean(
+            (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+        )
+        return ce, {"ce": ce, "acc": acc, "aux": aux}

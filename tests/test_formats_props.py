@@ -1,0 +1,84 @@
+"""Property-based format invariants (every registered format in BY_NAME).
+
+For any input, ``qdq_unit`` must be (1) idempotent — quantized values are
+fixed points, (2) closed over the representable grid, and (3) bounded by
+``qmin``/``qmax_pos``.  These are the contracts the ABFP simulator, the
+Pallas kernels and the native-int8 path all build on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'hypothesis' dev extra")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.formats import BY_NAME, IntFormat, representable_values
+
+FMT_NAMES = sorted(BY_NAME)
+
+# unit-scaled samples: x = u * qmax_pos stresses in-range values, the
+# saturation region (|u| > 1) and the subnormal neighbourhood of zero.
+unit_floats = st.floats(
+    min_value=-4.0, max_value=4.0, allow_nan=False, width=32
+)
+
+
+def _qdq(fmt, v: float) -> float:
+    return float(fmt.qdq_unit(jnp.asarray(v, jnp.float32)))
+
+
+@pytest.mark.parametrize("name", FMT_NAMES)
+@given(u=unit_floats)
+@settings(max_examples=100, deadline=None)
+def test_qdq_unit_idempotent(name, u):
+    fmt = BY_NAME[name]
+    once = _qdq(fmt, u * fmt.qmax_pos)
+    twice = _qdq(fmt, once)
+    assert once == twice
+
+
+@pytest.mark.parametrize("name", FMT_NAMES)
+@given(u=unit_floats)
+@settings(max_examples=100, deadline=None)
+def test_qdq_unit_output_on_grid(name, u):
+    fmt = BY_NAME[name]
+    y = _qdq(fmt, u * fmt.qmax_pos)
+    grid = representable_values(fmt)
+    full = np.concatenate([-grid[::-1], grid])
+    # exact membership up to fp32 roundoff of the grid value itself
+    dist = np.min(np.abs(full - y))
+    assert dist <= 1e-6 * max(abs(y), 1.0)
+
+
+@pytest.mark.parametrize("name", FMT_NAMES)
+@given(u=unit_floats)
+@settings(max_examples=100, deadline=None)
+def test_qdq_unit_bounds(name, u):
+    fmt = BY_NAME[name]
+    y = _qdq(fmt, u * fmt.qmax_pos)
+    assert y <= fmt.qmax_pos
+    if isinstance(fmt, IntFormat):
+        assert y >= fmt.qmin
+        assert y == round(y)  # integer formats produce integer-valued codes
+    else:
+        assert y >= -fmt.qmax_pos
+
+
+@pytest.mark.parametrize("name", FMT_NAMES)
+def test_grid_is_qdq_fixed_points(name):
+    """Every enumerated representable value round-trips exactly."""
+    fmt = BY_NAME[name]
+    grid = representable_values(fmt)
+    full = np.concatenate([-grid[::-1], grid]).astype(np.float32)
+    y = np.asarray(fmt.qdq_unit(jnp.asarray(full)))
+    np.testing.assert_array_equal(y, full)
+
+
+@pytest.mark.parametrize("name", FMT_NAMES)
+def test_qmax_is_largest_representable(name):
+    fmt = BY_NAME[name]
+    grid = representable_values(fmt)
+    assert grid.max() == fmt.qmax_pos

@@ -119,6 +119,40 @@ def test_int8_matmul_kernel_vs_ref(fx, fw):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize(
+    "M,K,N,bm,bn,bk",
+    [
+        (8, 64, 24, 8, 8, 64),       # minimal, non-square N
+        (48, 192, 16, 16, 16, 64),   # K-loop over 3 steps, M-grid
+        (96, 320, 40, 32, 8, 64),    # every dim non-square, 5 K-steps
+        (16, 384, 112, 16, 16, 128), # wide-K narrow-M, bk = 2 groups
+    ],
+)
+@pytest.mark.parametrize("n", [32, 64, 128])
+def test_int8_matmul_kernel_parity_sweep(M, K, N, bm, bn, bk, n):
+    """Int8-native Pallas kernel vs the jnp oracle across non-square
+    M/K/N grids and group sizes (interpret mode).
+
+    Tolerance rationale: both sides quantize to IDENTICAL int codes (same
+    bf16-rounded scales, same round-half-even), so the int32 group
+    contractions are exact and the only divergence is fp32 summation order
+    of the per-group rescaled partials — K/n terms of magnitude ~n·s_x·s_w.
+    With |y| ~ sqrt(K) and <= K/n reorderings, relative error is bounded
+    well under 1e-5; 1e-4 rtol leaves 10x headroom, and atol=1e-4 covers
+    catastrophic-cancellation rows where y ~ 0.
+    """
+    if K % n or bk % n:
+        pytest.skip("group must divide K and the K-block")
+    rng = np.random.RandomState(n + M + N)
+    x = jnp.asarray(rng.randn(M, K), jnp.float32)
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    got = abfp_matmul_int8(x, w, INT8, INT4, n=n, block_m=bm, block_n=bn,
+                           block_k=bk, interpret=True)
+    want = int8_matmul_ref(x, w, INT8, INT4, n=n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_int8_matmul_equals_fp_path():
     """Native int path == QDQ-then-fp32-matmul for int formats (exactness
     of the factored rescale)."""
@@ -153,6 +187,24 @@ def test_ops_fused_matmul_policy_dispatch():
     ).reshape(4, 8, 64)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_ops_fused_int8_policy_dispatch():
+    """compute='int8' policies must dispatch ops.abfp_matmul_fused to the
+    native-int kernel and match the jnp oracle (same tolerance rationale as
+    the parity sweep: identical codes, fp32 rescale reassociation only)."""
+    from repro.core.policy import preset
+
+    rng = np.random.RandomState(12)
+    x = jnp.asarray(rng.randn(4, 6, 128), jnp.float32)
+    w = jnp.asarray(rng.randn(128, 48), jnp.float32)
+    pol = preset("w4a8_int8_native")
+    got = ops.abfp_matmul_fused(x, w, pol, interpret=True)
+    want = int8_matmul_ref(
+        x.reshape(-1, 128), w, INT8, INT4, n=64
+    ).reshape(4, 6, 48)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_fused_qmatmul_route():

@@ -145,3 +145,70 @@ def test_batch_specs_families():
             # vlm: patches + tokens = seq_len
             assert (sds["tokens"].shape[1] + sds["patch_embeds"].shape[1]
                     == 4096)
+
+
+class _SizedMesh(_Mesh):
+    def __init__(self, axes, shape):
+        super().__init__(axes, shape)
+        self.devices.shape = shape
+
+
+def test_spec_for_fit_shape_drops_nondividing_axes():
+    """jit arguments must divide exactly: a mesh axis the dim can't fill is
+    skipped, falling back toward replication (DeiT's 384-wide qkv on a
+    256-way FSDP (data, model) sharding keeps only the 16-way prefix)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import sharding as shd
+
+    mesh = _SizedMesh(("data", "model"), (16, 16))
+    rules = {"qkv": ("data", "model")}
+    assert shd.spec_for(("qkv",), rules=rules, mesh=mesh,
+                        fit_shape=(384,)) == P(("data",))
+    # 512 divides the full 256-way product -> both axes kept
+    assert shd.spec_for(("qkv",), rules=rules, mesh=mesh,
+                        fit_shape=(512,)) == P(("data", "model"))
+    # nothing divides -> fully replicated
+    assert shd.spec_for(("qkv",), rules=rules, mesh=mesh,
+                        fit_shape=(7,)) == P(None)
+
+
+def test_spec_for_fit_skipped_axis_not_consumed():
+    """An axis skipped for divisibility stays claimable by a later dim."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import sharding as shd
+
+    mesh = _SizedMesh(("data", "model"), (16, 16))
+    rules = {"r1": "model", "r2": "model"}
+    spec = shd.spec_for(("r1", "r2"), rules=rules, mesh=mesh,
+                        fit_shape=(10, 32))
+    assert spec == P(None, "model")
+
+
+def test_spec_for_fit_shape_rank_mismatch_raises():
+    from repro.dist import sharding as shd
+
+    mesh = _SizedMesh(("data",), (8,))
+    with pytest.raises(ValueError, match="rank"):
+        shd.spec_for(("batch", "embed"), rules={"batch": "data"}, mesh=mesh,
+                     fit_shape=(8,))
+
+
+def test_batch_specs_vit():
+    cfg = get_config("vit-b16")
+    sds, axes = sp.batch_specs(cfg, SHAPES["train_4k"])
+    assert sds["images"].shape == (256, 224, 224, 3)
+    assert sds["labels"].shape == (256,)
+    assert axes["images"] == ("batch", None, None, None)
+    # eval forward: no labels in the batch
+    sds_e, _ = sp.batch_specs(cfg, SHAPES["prefill_32k"])
+    assert "images" in sds_e and "labels" not in sds_e
+
+
+def test_model_flops_vit_uses_image_grid():
+    cfg = get_config("vit-b16")
+    f = rf.model_flops(cfg, SHAPES["train_4k"], chips=256)
+    # tokens come from the 14x14+cls image grid, not the shape's seq_len
+    assert f == pytest.approx(6 * cfg.n_params() * cfg.vit_seq_len * 256
+                              / 256)

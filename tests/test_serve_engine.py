@@ -98,6 +98,58 @@ def test_engine_rejects_oversized_request(setup):
                            max_new_tokens=8))
 
 
+def test_engine_eos_evict_readmit_determinism(setup):
+    """Slot eviction on EOS + re-admission must be invisible to results.
+
+    A request stream where some sequences finish early by EOS — freeing
+    slots that queued requests immediately re-use mid-flight — must produce
+    exactly the completions of serving every request alone in a fresh
+    single-slot engine.  This pins the continuous-batching bookkeeping
+    (cache scatter, per-slot positions, cur_token handoff) as deterministic
+    and isolation-safe.
+    """
+    cfg, model, params = setup
+    pol = preset("fp32")
+    prompts = [
+        np.array([5, 9, 3, 7], np.int32),
+        np.array([1, 2, 3, 4, 5, 6], np.int32),
+        np.array([100, 42], np.int32),
+        np.array([11, 13, 17], np.int32),
+        np.array([2, 71, 82, 81, 8], np.int32),
+    ]
+    greedy = [_greedy_reference(model, params, p, 8, pol) for p in prompts]
+    # EOS choices force mid-flight evictions: req0 stops at its 3rd
+    # generated token, req3 at its very first (prefill-time eviction and
+    # immediate slot reuse); the rest run to max length.
+    eos_ids = [greedy[0][2], None, None, greedy[3][0], None]
+    reqs = [
+        Request(uid=i, prompt=p, max_new_tokens=8, eos_id=e)
+        for i, (p, e) in enumerate(zip(prompts, eos_ids))
+    ]
+
+    # sequential single-request serving (fresh 1-slot engine per request)
+    seq_done = {}
+    for r in reqs:
+        eng = ServeEngine(model, params, n_slots=1, max_len=64, policy=pol)
+        eng.submit(Request(uid=r.uid, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens, eos_id=r.eos_id))
+        seq_done[r.uid] = eng.run_until_done()[0]
+    assert seq_done[0].finished_reason == "eos"
+    assert seq_done[3].finished_reason == "eos"
+    assert len(seq_done[3].tokens) == 1
+
+    # continuous batching: 2 slots over 5 requests -> queueing + reuse
+    eng = ServeEngine(model, params, n_slots=2, max_len=64, policy=pol)
+    for r in reqs:
+        eng.submit(r)
+    batched = {c.uid: c for c in eng.run_until_done()}
+    assert set(batched) == set(seq_done)
+    for uid, ref in seq_done.items():
+        got = batched[uid]
+        assert got.tokens == ref.tokens, f"request {uid} diverged"
+        assert got.finished_reason == ref.finished_reason, uid
+
+
 def test_engine_interleaved_admission_isolation(setup):
     """A request admitted mid-flight must not perturb a running slot."""
     cfg, model, params = setup

@@ -1,0 +1,172 @@
+"""ViT classification subsystem: patch-embed quant routing, encoder forward
+under the paper's policy grid, pooling variants, QAT grad flow, calibration
+contract, scan/unrolled parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.formats import INT4
+from repro.core.policy import preset
+from repro.core.simulate import qmatmul
+from repro.models import build_model
+from repro.models import quant_transforms as qt
+from repro.nn.module import unbox
+from repro.nn.patch_embed import PatchEmbed, extract_patches
+
+B = 4
+
+
+def _cfg(**kw):
+    # eager-unrolled by default: calibration observers need per-layer sites
+    kw.setdefault("scan_layers", False)
+    return get_config("vit-b16").reduced().replace(**kw)
+
+
+def _images(cfg, seed=0, batch=B):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(
+        rng.randn(batch, cfg.image_size, cfg.image_size, cfg.n_channels),
+        jnp.float32,
+    )
+
+
+@pytest.fixture(scope="module")
+def built():
+    cfg = _cfg()
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+# ------------------------------------------------------------- patch embed
+def test_extract_patches_layout():
+    """Patch rows must be the (ph, pw, c)-flattened conv receptive fields."""
+    H = P = 4
+    img = jnp.arange(2 * 8 * 8 * 3, dtype=jnp.float32).reshape(2, 8, 8, 3)
+    patches = extract_patches(img, P)
+    assert patches.shape == (2, 4, P * P * 3)
+    # patch 1 is the top-RIGHT 4x4 block (row-major patch order)
+    want = img[:, 0:4, 4:8, :].reshape(2, -1)
+    np.testing.assert_array_equal(np.asarray(patches[:, 1]), np.asarray(want))
+
+
+def test_patch_embed_routes_through_qmatmul():
+    """PatchEmbed == unfold + qmatmul + bias, for fp32 AND quantized
+    policies — the conv projection shares the simulator chokepoint."""
+    pe = PatchEmbed(image_size=16, patch_size=8, n_channels=3, d_model=32)
+    params = pe.init(jax.random.PRNGKey(1))
+    params = unbox(params)
+    rng = np.random.RandomState(2)
+    img = jnp.asarray(rng.randn(B, 16, 16, 3), jnp.float32)
+    patches = extract_patches(img, 8)
+    for pol_name in ("fp32", "w4a4_abfp", "w4a16"):
+        pol = preset(pol_name)
+        got = pe.apply(params, img, pol)
+        want = qmatmul(patches, params["kernel"], pol) + params["bias"]
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5,
+            err_msg=pol_name)
+    # the quantized path must actually differ from fp32 (routing engaged)
+    fp = pe.apply(params, img, preset("fp32"))
+    q4 = pe.apply(params, img, preset("w4a4_abfp"))
+    assert float(jnp.abs(fp - q4).max()) > 1e-4
+
+
+# ------------------------------------------------------------ forward pass
+@pytest.mark.parametrize(
+    "pol_name", ["fp32", "w4a4_abfp", "w4a8_abfp", "w4a4_e2m1"]
+)
+def test_forward_policies(built, pol_name):
+    cfg, model, params = built
+    batch = {"images": _images(cfg)}
+    logits, aux = model.apply(params, batch, preset(pol_name))
+    vit = model.inner
+    assert logits.shape == (B, vit.n_classes_padded)
+    assert not bool(jnp.isnan(logits).any())
+    # padded class ids are masked out
+    assert float(logits[:, cfg.n_classes:].max()) < -1e8
+
+
+def test_mean_pool_variant():
+    cfg = _cfg(pool="mean")
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(3)))
+    assert "cls" not in params
+    logits, _ = model.apply(params, {"images": _images(cfg)},
+                            preset("w4a8_abfp"))
+    assert logits.shape[0] == B and not bool(jnp.isnan(logits).any())
+
+
+def test_scan_matches_unrolled(built):
+    cfg, model, params = built
+    cfg_s = cfg.replace(scan_layers=True)
+    model_s = build_model(cfg_s)
+    stacked = dict(params)
+    stacked["blocks"] = jax.tree_util.tree_map(
+        lambda *a: jnp.stack(a), *params["blocks"]
+    )
+    batch = {"images": _images(cfg)}
+    l_u, _ = model.apply(params, batch, preset("fp32"))
+    l_s, _ = model_s.apply(stacked, batch, preset("fp32"))
+    np.testing.assert_allclose(np.asarray(l_u), np.asarray(l_s),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ QAT grad flow
+def test_qat_ste_grad_flow(built):
+    """PWL-STE gradients reach the head AND the patch projection through
+    the quantized forward (paper eqn (5))."""
+    cfg, model, params = built
+    rng = np.random.RandomState(4)
+    batch = {
+        "images": _images(cfg, seed=4),
+        "labels": jnp.asarray(rng.randint(0, cfg.n_classes, (B,)), jnp.int32),
+    }
+    pol = preset("w4a4_abfp").with_ste(True)
+    grads = jax.grad(lambda p: model.loss(p, batch, pol)[0])(params)
+    flat = {
+        "head": grads["head"]["kernel"],
+        "head_bias": grads["head"]["bias"],
+        "patch": grads["patch_embed"]["kernel"],
+        "cls": grads["cls"],
+        "pos": grads["pos_embed"],
+    }
+    for name, g in flat.items():
+        assert np.all(np.isfinite(np.asarray(g))), name
+        assert float(jnp.abs(g).max()) > 0, f"no gradient reached {name}"
+
+
+# ----------------------------------------------------- calibration contract
+def test_calibration_and_static_qtree(built):
+    """Eager-unrolled ViT feeds the LM PTQ drivers unchanged: sites match
+    the blocks.{i}/... contract, and the static-MSE tree evaluates."""
+    cfg, model, params = built
+    rng = np.random.RandomState(5)
+    batches = [{"images": _images(cfg, seed=10 + i)} for i in range(2)]
+    calib = qt.calibrate(model, params, batches, preset("w4a8_mse"))
+    assert f"blocks.0/attn/q/in" in calib.stats
+    assert f"blocks.{cfg.n_layers - 1}/ffn/wi/in" in calib.stats
+    assert "patch_embed/in" in calib.stats  # frontend observed too
+    q = qt.static_qtree(calib, INT4, cfg.n_layers, method="mse")
+    assert len(q["blocks"]) == cfg.n_layers
+    assert "in_alpha" in q["blocks"][0]["attn"]["q"]
+    logits, _ = model.apply(params, batches[0], preset("w4a4_mse"), q=q)
+    assert not bool(jnp.isnan(logits).any())
+    # static scales must change the quantized output vs dynamic fallback
+    dyn, _ = model.apply(params, batches[0], preset("w4a4_mse"))
+    assert float(jnp.abs(logits - dyn).max()) > 0
+
+
+# -------------------------------------------------------------- config glue
+def test_registry_and_param_count():
+    for name in ("vit-b16", "deit-s16"):
+        cfg = get_config(name)
+        assert cfg.family == "vit"
+        assert cfg.vit_seq_len == 197  # 14x14 patches + cls
+        assert cfg.n_params() > 0
+        assert "decode_32k" in cfg.skip_shapes
+    # ViT-B/16 is ~86M params; the analytic count must be in that ballpark
+    assert 70e6 < get_config("vit-b16").n_params() < 100e6
