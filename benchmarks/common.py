@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.checkpoint import store
 from repro.configs import get_config
-from repro.core.policy import QuantPolicy, preset
+from repro.core.policy import Policy, QuantPolicy, policies_of, preset
 from repro.data.corpus import synthetic_corpus
 from repro.data.images import ImageLoader, eval_image_batches, synthetic_images
 from repro.data.loader import LMLoader, eval_batches
@@ -110,6 +110,12 @@ def proxy_config(name: str):
         if name == "opt-proxy-l":
             return cfg.replace(name=name, n_layers=6, d_model=256, n_heads=8,
                                n_kv=8, head_dim=32, d_ff=1024, vocab=VOCAB)
+        if name == "opt-proxy-d":
+            # deep-thin proxy for the layer-sensitivity (mixed_table) sweep:
+            # enough depth that W8A8 endcaps are a small fraction of the
+            # weight-bits budget (2/12 blocks), thin dims to stay CPU-cheap
+            return cfg.replace(name=name, n_layers=12, d_model=64, n_heads=4,
+                               n_kv=4, head_dim=16, d_ff=256, vocab=VOCAB)
         raise ValueError(name)
     # reduced assigned archs (Table X "additional models")
     cfg = get_config(name).reduced().replace(vocab=VOCAB, scan_layers=False)
@@ -167,7 +173,7 @@ def train_proxy(name: str, steps: int = 500, seed: int = 0,
                          force)
 
 
-def finetune_qat(model, params, policy: QuantPolicy, steps: int = 60,
+def finetune_qat(model, params, policy: Policy, steps: int = 60,
                  seed: int = 1, batch: int = 8, lr: float = 3e-4):
     """QAT (paper §II-C): ABFP forward + PWL-STE backward fine-tuning."""
     stream, _ = split(corpus())
@@ -184,15 +190,15 @@ def finetune_qat(model, params, policy: QuantPolicy, steps: int = 60,
     return params
 
 
-def _has_ste(policy: QuantPolicy) -> bool:
+def _has_ste(policy: Policy) -> bool:
     return any(
-        getattr(policy, r) is not None and getattr(policy, r).ste
-        for r in ("input", "weight", "output")
+        getattr(p, r) is not None and getattr(p, r).ste
+        for p in policies_of(policy) for r in ("input", "weight", "output")
     )
 
 
 # ------------------------------------------------------------------- eval
-def eval_ppl(model, params, policy: QuantPolicy, q=None,
+def eval_ppl(model, params, policy: Policy, q=None,
              max_batches: int = 12, batch: int = 8) -> float:
     _, ev = split(corpus())
     losses = []
@@ -279,7 +285,7 @@ def train_vit_proxy(name: str, steps: int = 500, seed: int = 0,
                          force)
 
 
-def eval_top1(model, params, policy: QuantPolicy, q=None,
+def eval_top1(model, params, policy: Policy, q=None,
               max_batches: int = 16, batch: int = 64) -> float:
     """Held-out top-1 accuracy under ``policy`` (+ optional static q tree)."""
     _, _, xev, yev = image_data(model.cfg)

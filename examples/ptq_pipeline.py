@@ -39,7 +39,13 @@ def main():
     rows = [("fp32 baseline", C.eval_ppl(model, params, preset("fp32")))]
 
     # --- static MSE calibration (Table I/IV) ----------------------------
-    q = qt.static_qtree(calib, INT8, cfg.n_layers, method="mse")
+    q, dropped = qt.static_qtree(calib, INT8, cfg.n_layers, method="mse",
+                                 return_report=True)
+    if dropped:
+        # sites outside the block tree (e.g. the tied LM head readout
+        # 'embed/attend/in') fall back to dynamic-max at eval
+        print(f"  note: {len(dropped)} calibration site(s) not in the "
+              f"static q-tree (dynamic-max fallback): {', '.join(dropped)}")
     rows.append(("W4A8 static-MSE",
                  C.eval_ppl(model, params, preset("w4a8_mse"), q=q)))
 
@@ -63,6 +69,13 @@ def main():
     q_rptq, _ = qt.rptq_qtree(calib, cfg.n_layers)
     rows.append(("W4A8 RPTQ",
                  C.eval_ppl(model, params, preset("w4a8_mse"), q=q_rptq)))
+
+    # --- site-addressed mixed precision (PolicyMap) -------------------------
+    # W8A8 endcap blocks, W4A4 interior: the layer-sensitivity assignment
+    # (see benchmarks mixed_table for the full sweep + weight-bits budget)
+    mixed = preset("w4a4_abfp+w8a8_ends", n_layers=cfg.n_layers)
+    rows.append(("W4A4+W8A8-ends ABFP",
+                 C.eval_ppl(model, params, mixed)))
 
     # --- QAT fine-tuning (eqn (5) PWL-STE) ---------------------------------
     qat_params = C.finetune_qat(model, params, preset("w4a4_abfp"),

@@ -2,6 +2,21 @@
 
 from repro.core import formats
 from repro.core.formats import get_format
-from repro.core.policy import QuantPolicy, TensorQuant, preset
+from repro.core.policy import (
+    Policy,
+    PolicyMap,
+    PolicyRule,
+    QuantPolicy,
+    TensorQuant,
+    as_policy_map,
+    policy_from_dict,
+    policy_to_dict,
+    preset,
+    resolve_policy,
+)
 
-__all__ = ["formats", "get_format", "QuantPolicy", "TensorQuant", "preset"]
+__all__ = [
+    "formats", "get_format", "Policy", "PolicyMap", "PolicyRule",
+    "QuantPolicy", "TensorQuant", "as_policy_map", "policy_from_dict",
+    "policy_to_dict", "preset", "resolve_policy",
+]

@@ -2,7 +2,26 @@
 
 ``TensorQuant`` configures one tensor role (input / weight / output) of a
 matmul site; ``QuantPolicy`` bundles the three roles plus execution options.
-Policies are frozen/hashable so they can close over jitted step functions.
+``PolicyMap`` lifts that to *site-addressed mixed precision*: an ordered
+list of ``(site_pattern, QuantPolicy)`` rules resolved first-match-wins
+against the matmul site address, with a default policy for unmatched sites.
+Everything is frozen/hashable so policies close over jitted step functions.
+
+Site addresses follow the calibration site-name contract (minus the
+trailing ``/in``), e.g.::
+
+    blocks.3/attn/q        attention q projection of block 3
+    blocks.3/attn          the block's attention BMMs / KV-cache handling
+    blocks.3/ffn/wi        MLP input projection (wg shares wi's input)
+    blocks.3/mamba/in_proj SSM input projection
+    embed/attend           tied LM head readout
+    patch_embed / head     ViT frontend / classifier head
+
+Patterns are ``fnmatch`` globs (``*`` crosses ``/``) or, with a ``re:``
+prefix, full regexes matched with ``re.fullmatch``.  Per-layer rules
+(``blocks.0/*``) require eager unrolled execution (``scan_layers=False``) —
+under scan-over-layers every layer shares one trace, the same constraint
+calibration already has.
 
 Presets mirror the paper's experimental grid:
   w4a4_abfp, w4a8_abfp        — Tables I-IV, VII, VIII, X
@@ -12,11 +31,19 @@ Presets mirror the paper's experimental grid:
   *_qat                       — ABFP forward + PWL-STE backward (eqn (5))
   w4a16                       — weight-only (GPTQ baseline config)
   w8a8_int8_native            — beyond-paper: real int8 MXU compute
+Mixed (PolicyMap) presets — the layer-sensitivity frontier:
+  w4a4_abfp+w8a8_ends         — W8A8 first/last blocks, W4A4 interior
+                                (requires ``n_layers``)
+  w4ffn_fp8attn               — FP8-E4M3 attention, INT4 ABFP FFN
 """
 
 from __future__ import annotations
 
 import dataclasses
+import fnmatch
+import functools
+import re
+from typing import Callable, Union
 
 from repro.core.formats import Format, get_format
 
@@ -97,75 +124,430 @@ class QuantPolicy:
 NONE = QuantPolicy()
 
 
+# ---------------------------------------------------------------------------
+# Site-addressed PolicyMap
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PolicyRule:
+    """One ``(site_pattern, policy)`` entry of a PolicyMap.
+
+    ``pattern`` is an fnmatch glob over the site address, or a regex when
+    prefixed with ``re:`` (anchored — matched with ``re.fullmatch``).
+    """
+
+    pattern: str
+    policy: QuantPolicy
+
+    def matches(self, site: str) -> bool:
+        if self.pattern.startswith("re:"):
+            return re.fullmatch(self.pattern[3:], site) is not None
+        return fnmatch.fnmatchcase(site, self.pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyMap:
+    """Ordered site-pattern rules, first-match-wins, with a default policy.
+
+    Frozen and hashable: a PolicyMap closes over jitted step functions
+    exactly like a flat QuantPolicy (resolution happens at trace time on
+    static site strings, so it costs nothing inside the compiled graph).
+    """
+
+    name: str = "map"
+    rules: tuple = ()  # tuple[PolicyRule, ...]; (pattern, policy) coerced
+    default: QuantPolicy = NONE
+
+    def __post_init__(self):
+        coerced = tuple(
+            r if isinstance(r, PolicyRule) else PolicyRule(*r)
+            for r in self.rules
+        )
+        object.__setattr__(self, "rules", coerced)
+
+    # --- resolution --------------------------------------------------------
+    def resolve(self, site: str) -> QuantPolicy:
+        """First rule whose pattern matches ``site``; else the default."""
+        return _resolve_cached(self, site)
+
+    # --- flat-policy protocol ----------------------------------------------
+    @property
+    def enabled(self) -> bool:
+        return self.default.enabled or any(r.policy.enabled for r in self.rules)
+
+    def replace(self, **kw) -> "PolicyMap":
+        return dataclasses.replace(self, **kw)
+
+    def map_policies(self, fn: Callable[[QuantPolicy], QuantPolicy],
+                     name: str | None = None) -> "PolicyMap":
+        """Apply ``fn`` to every rule policy and the default."""
+        return PolicyMap(
+            name=name or self.name,
+            rules=tuple(PolicyRule(r.pattern, fn(r.policy))
+                        for r in self.rules),
+            default=fn(self.default),
+        )
+
+    def replace_all(self, **kw) -> "PolicyMap":
+        """``QuantPolicy.replace`` across all enabled rules + default
+        (method form of module-level ``replace_enabled``)."""
+        return replace_enabled(self, **kw)
+
+    def with_ste(self, ste: bool = True) -> "PolicyMap":
+        return self.map_policies(
+            lambda p: p.with_ste(ste) if p.enabled else p,
+            name=self.name + "_qat",
+        )
+
+    @property
+    def policies(self) -> tuple:
+        """All distinct policies, rule order then default."""
+        seen, out = set(), []
+        for p in [r.policy for r in self.rules] + [self.default]:
+            if p not in seen:
+                seen.add(p)
+                out.append(p)
+        return tuple(out)
+
+
+@functools.lru_cache(maxsize=4096)
+def _resolve_cached(pm: PolicyMap, site: str) -> QuantPolicy:
+    for rule in pm.rules:
+        if rule.matches(site):
+            return rule.policy
+    return pm.default
+
+
+Policy = Union[QuantPolicy, PolicyMap]
+
+
+def resolve_policy(policy: Policy, site: str) -> QuantPolicy:
+    """The one resolution chokepoint every layer routes through.
+
+    Flat QuantPolicy passes through unchanged (compat: a flat policy IS a
+    single-rule map); PolicyMap resolves at the site address.
+    """
+    if isinstance(policy, PolicyMap):
+        return policy.resolve(site)
+    return policy
+
+
+def as_policy_map(policy: Policy, name: str | None = None) -> PolicyMap:
+    """Compat shim: lift a flat QuantPolicy into an equivalent PolicyMap."""
+    if isinstance(policy, PolicyMap):
+        return policy
+    return PolicyMap(name=name or policy.name, rules=(), default=policy)
+
+
+def has_site_rules(policy: Policy) -> bool:
+    """True when any site rules exist."""
+    return isinstance(policy, PolicyMap) and len(policy.rules) > 0
+
+
+def has_layer_rules(policy: Policy) -> bool:
+    """True when rules address specific layers (``blocks.{i}/...``).
+
+    Layer-indexed rules require eager unrolled execution
+    (``scan_layers=False``): under scan-over-layers every layer shares one
+    trace whose sites are ``block/...``, so ``blocks.3/...`` patterns would
+    silently fall through to the default.  Models raise on this combination
+    instead of mis-resolving.  (Heuristic on the documented site contract:
+    a rule is layer-indexed iff its pattern mentions ``blocks`` — plural
+    only exists in the unrolled ``blocks.{i}/...`` naming; scan sites are
+    ``block/...``, so any ``blocks``-mentioning pattern, including dot-less
+    globs like ``blocks*`` or regex spellings ``blocks\\.``/``blocks[.]``,
+    can never match under scan.)
+    """
+    return has_site_rules(policy) and any(
+        "blocks" in r.pattern for r in policy.rules
+    )
+
+
+def check_scan_compatible(policy: Policy, scan_layers: bool,
+                          model_name: str = "") -> None:
+    """Raise if layer-indexed rules are used with scan-over-layers."""
+    if scan_layers and has_layer_rules(policy):
+        raise ValueError(
+            f"PolicyMap {policy.name!r} has layer-indexed rules "
+            f"({[r.pattern for r in policy.rules]}) which need per-layer "
+            f"sites: run {model_name or 'the model'} with "
+            "cfg.scan_layers=False (the same eager-unrolled constraint "
+            "calibration already has)"
+        )
+
+
+def reject_layer_rules(policy: Policy, model_name: str = "") -> None:
+    """Raise if layer-indexed rules hit a model without per-layer sites.
+
+    encdec/hybrid address their matmuls with family-level names (``attn``,
+    ``shared/q``, ``mamba/...``) — no ``blocks.{i}`` prefix exists there, so
+    layer-indexed rules would silently resolve to the default everywhere.
+    """
+    if has_layer_rules(policy):
+        raise NotImplementedError(
+            f"{model_name or 'this model family'} does not thread "
+            f"per-layer site names; layer-indexed PolicyMap rules "
+            f"({[r.pattern for r in policy.rules]}) are unsupported here — "
+            "use pattern rules like '*attn*' / 'mamba*' instead"
+        )
+
+
+def policies_of(policy: Policy) -> tuple:
+    """All distinct flat policies behind ``policy`` (one for a flat)."""
+    if isinstance(policy, PolicyMap):
+        return policy.policies
+    return (policy,)
+
+
+def map_policies(policy: Policy,
+                 fn: Callable[[QuantPolicy], QuantPolicy]) -> Policy:
+    """Apply ``fn`` across a flat policy or every entry of a map."""
+    if isinstance(policy, PolicyMap):
+        return policy.map_policies(fn)
+    return fn(policy)
+
+
+def replace_enabled(policy: Policy, **kw) -> Policy:
+    """``QuantPolicy.replace(**kw)`` across a flat policy or every enabled
+    entry of a map (disabled fp32 rules stay untouched) — the one place the
+    skip-disabled contract lives for launch-time overrides."""
+    return map_policies(policy,
+                        lambda p: p.replace(**kw) if p.enabled else p)
+
+
+def kv_cache_mode(policy: Policy) -> str:
+    """The (engine-global) KV-cache storage mode.
+
+    Cache *storage* is allocated once for all layers, so a map's rules must
+    agree on it; heterogeneous kv_cache across sites is rejected here rather
+    than silently mis-sizing the cache.
+    """
+    if isinstance(policy, QuantPolicy):
+        return policy.kv_cache
+    # disabled (fp32) rules count: cache storage keys off kv_cache alone
+    # (fill_cache stores int8 whenever kv_cache == 'int8', enabled or not),
+    # so an fp32 rule's 'requant' is heterogeneous with int8 elsewhere
+    modes = {p.kv_cache for p in policy.policies}
+    if len(modes) > 1:
+        raise ValueError(
+            f"PolicyMap {policy.name!r} mixes kv_cache modes {sorted(modes)} "
+            "(fp32 rules count: cache storage is structural); KV-cache "
+            "storage is engine-global — set it on every entry with "
+            "with_kv_cache(policy, mode)"
+        )
+    return modes.pop()
+
+
+def with_kv_cache(policy: Policy, mode: str) -> Policy:
+    """Set ``kv_cache`` on EVERY entry of a map (disabled fp32 rules too).
+
+    Unlike ``replace_enabled``, this must not skip disabled rules: cache
+    *storage* is structural — a layer whose resolved policy is fp32 still
+    owns cache slots, and those must match the other layers' storage
+    format or the stacked per-layer caches diverge in pytree structure.
+    """
+    return map_policies(policy, lambda p: p.replace(kv_cache=mode))
+
+
+# ---------------------------------------------------------------------------
+# Serialization (configs / artifacts round-trip)
+# ---------------------------------------------------------------------------
+def policy_to_dict(policy: Policy) -> dict:
+    """Plain-dict form of a flat policy or a map (JSON-safe)."""
+    if isinstance(policy, PolicyMap):
+        return {
+            "kind": "map",
+            "name": policy.name,
+            "rules": [
+                {"pattern": r.pattern, "policy": policy_to_dict(r.policy)}
+                for r in policy.rules
+            ],
+            "default": policy_to_dict(policy.default),
+        }
+    d = dataclasses.asdict(policy)
+    d["kind"] = "flat"
+    return d
+
+
+def policy_from_dict(d: dict) -> Policy:
+    """Inverse of ``policy_to_dict``."""
+    d = dict(d)
+    kind = d.pop("kind", "map" if "rules" in d else "flat")
+    if kind == "map":
+        return PolicyMap(
+            name=d.get("name", "map"),
+            rules=tuple(
+                PolicyRule(r["pattern"], policy_from_dict(r["policy"]))
+                for r in d.get("rules", ())
+            ),
+            default=policy_from_dict(d.get("default", {"kind": "flat"})),
+        )
+    for role in ("input", "weight", "output"):
+        if d.get(role) is not None:
+            d[role] = TensorQuant(**d[role])
+    return QuantPolicy(**d)
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
 def _abfp(fmt: str, n: int, ste: bool = False) -> TensorQuant:
     return TensorQuant(fmt_name=fmt, scaler="abfp", group=n, ste=ste)
 
 
-def preset(name: str, n: int = 64) -> QuantPolicy:
-    """Look up a named policy from the paper's grid."""
+# Built ONCE at module scope: name -> factory(n) -> QuantPolicy.  (The old
+# implementation rebuilt the whole policy table dict on every preset() call.)
+_PRESET_FACTORIES: dict[str, Callable[[int], QuantPolicy]] = {
+    # --- ABFP family (Tables I-IV, VIII, X) ---
+    "w4a4_abfp": lambda n: QuantPolicy(
+        name="w4a4_abfp", input=_abfp("int4", n), weight=_abfp("int4", n),
+        attn_bmm=True,
+    ),
+    "w4a8_abfp": lambda n: QuantPolicy(
+        name="w4a8_abfp", input=_abfp("int8", n), weight=_abfp("int4", n),
+        attn_bmm=True,
+    ),
+    "w8a8_abfp": lambda n: QuantPolicy(
+        name="w8a8_abfp", input=_abfp("int8", n), weight=_abfp("int8", n),
+        attn_bmm=True,
+    ),
+    # --- FP4 weights + activations (Table II) ---
+    "w4a4_e2m1": lambda n: QuantPolicy(
+        name="w4a4_e2m1", input=_abfp("e2m1", n), weight=_abfp("e2m1", n),
+        attn_bmm=True,
+    ),
+    "w4a4_e1m2": lambda n: QuantPolicy(
+        name="w4a4_e1m2", input=_abfp("e1m2", n), weight=_abfp("e1m2", n),
+        attn_bmm=True,
+    ),
+    # --- INT4 weights + FP8 activations (Tables V, VI) ---
+    "w4_ae4m3_abfp": lambda n: QuantPolicy(
+        name="w4_ae4m3_abfp", input=_abfp("e4m3", n), weight=_abfp("int4", n),
+        attn_bmm=True,
+    ),
+    # --- FP8 weights + activations (mixed-preset building block) ---
+    "w8a8_e4m3": lambda n: QuantPolicy(
+        name="w8a8_e4m3", input=_abfp("e4m3", n), weight=_abfp("e4m3", n),
+        attn_bmm=True,
+    ),
+    # --- static calibration (Tables I, IV): per-channel max weights,
+    #     static MSE activations ---
+    "w4a4_mse": lambda n: QuantPolicy(
+        name="w4a4_mse",
+        input=TensorQuant("int4", scaler="static"),
+        weight=TensorQuant("int4", scaler="channel_max"),
+        attn_bmm=True,
+    ),
+    "w4a8_mse": lambda n: QuantPolicy(
+        name="w4a8_mse",
+        input=TensorQuant("int8", scaler="static"),
+        weight=TensorQuant("int4", scaler="channel_max"),
+        attn_bmm=True,
+    ),
+    "w8a8_mse": lambda n: QuantPolicy(
+        name="w8a8_mse",
+        input=TensorQuant("int8", scaler="static"),
+        weight=TensorQuant("int8", scaler="channel_max"),
+        attn_bmm=True,
+    ),
+    # --- weight-only (GPTQ baseline shape, Table V "W4A16") ---
+    "w4a16": lambda n: QuantPolicy(
+        name="w4a16", input=None, weight=_abfp("int4", n), attn_bmm=False,
+    ),
+    # --- beyond-paper: native int8 compute ---
+    "w8a8_int8_native": lambda n: QuantPolicy(
+        name="w8a8_int8_native", input=_abfp("int8", n),
+        weight=_abfp("int8", n), attn_bmm=False, compute="int8",
+    ),
+    "w4a8_int8_native": lambda n: QuantPolicy(
+        name="w4a8_int8_native", input=_abfp("int8", n),
+        weight=_abfp("int4", n), attn_bmm=False, compute="int8",
+    ),
+}
+
+
+def endcap_map(interior: QuantPolicy, ends: QuantPolicy, n_layers: int,
+               name: str | None = None) -> PolicyMap:
+    """W-endcaps map: first/last blocks at ``ends``, interior at ``interior``.
+
+    The classic layer-sensitivity assignment — endcap blocks carry the
+    heaviest activation outliers, so they get the wider format while the
+    interior runs at the aggressive one.
+    """
+    if n_layers < 2:
+        raise ValueError(f"endcap map needs n_layers >= 2, got {n_layers}")
+    return PolicyMap(
+        name=name or f"{interior.name}+{ends.name}_ends",
+        rules=(
+            PolicyRule("blocks.0/*", ends),
+            PolicyRule(f"blocks.{n_layers - 1}/*", ends),
+        ),
+        default=interior,
+    )
+
+
+# Mixed presets: name -> factory(n, n_layers) -> PolicyMap.
+_MIXED_FACTORIES: dict[str, Callable[[int, int | None], PolicyMap]] = {}
+
+
+def _mixed(name: str):
+    def deco(fn):
+        _MIXED_FACTORIES[name] = fn
+        return fn
+    return deco
+
+
+@_mixed("w4a4_abfp+w8a8_ends")
+def _w4a4_w8a8_ends(n: int, n_layers: int | None) -> PolicyMap:
+    if n_layers is None:
+        raise ValueError(
+            "preset 'w4a4_abfp+w8a8_ends' addresses first/last blocks: pass "
+            "preset(name, n_layers=cfg.n_layers)"
+        )
+    return endcap_map(
+        _PRESET_FACTORIES["w4a4_abfp"](n),
+        _PRESET_FACTORIES["w8a8_abfp"](n),
+        n_layers,
+        name="w4a4_abfp+w8a8_ends",
+    )
+
+
+@_mixed("w4ffn_fp8attn")
+def _w4ffn_fp8attn(n: int, n_layers: int | None) -> PolicyMap:
+    """FP8-E4M3 attention (projections + BMMs), INT4-ABFP FFN + rest."""
+    return PolicyMap(
+        name="w4ffn_fp8attn",
+        rules=(PolicyRule("*attn*", _PRESET_FACTORIES["w8a8_e4m3"](n)),),
+        default=_PRESET_FACTORIES["w4a4_abfp"](n),
+    )
+
+
+def preset(name: str, n: int = 64, n_layers: int | None = None) -> Policy:
+    """Look up a named policy (flat or mixed) from the paper's grid.
+
+    ``n`` is the ABFP group size; ``n_layers`` is required by mixed presets
+    whose rules address first/last blocks (e.g. ``w4a4_abfp+w8a8_ends``).
+    """
     key = name.lower()
     if key in ("fp32", "none", "off", "baseline"):
         return NONE
-    table: dict[str, QuantPolicy] = {
-        # --- ABFP family (Tables I-IV, VIII, X) ---
-        "w4a4_abfp": QuantPolicy(
-            name=key, input=_abfp("int4", n), weight=_abfp("int4", n),
-            attn_bmm=True,
-        ),
-        "w4a8_abfp": QuantPolicy(
-            name=key, input=_abfp("int8", n), weight=_abfp("int4", n),
-            attn_bmm=True,
-        ),
-        # --- FP4 weights + activations (Table II) ---
-        "w4a4_e2m1": QuantPolicy(
-            name=key, input=_abfp("e2m1", n), weight=_abfp("e2m1", n),
-            attn_bmm=True,
-        ),
-        "w4a4_e1m2": QuantPolicy(
-            name=key, input=_abfp("e1m2", n), weight=_abfp("e1m2", n),
-            attn_bmm=True,
-        ),
-        # --- INT4 weights + FP8 activations (Tables V, VI) ---
-        "w4_ae4m3_abfp": QuantPolicy(
-            name=key, input=_abfp("e4m3", n), weight=_abfp("int4", n),
-            attn_bmm=True,
-        ),
-        # --- static calibration (Tables I, IV): per-channel max weights,
-        #     static MSE activations ---
-        "w4a4_mse": QuantPolicy(
-            name=key,
-            input=TensorQuant("int4", scaler="static"),
-            weight=TensorQuant("int4", scaler="channel_max"),
-            attn_bmm=True,
-        ),
-        "w4a8_mse": QuantPolicy(
-            name=key,
-            input=TensorQuant("int8", scaler="static"),
-            weight=TensorQuant("int4", scaler="channel_max"),
-            attn_bmm=True,
-        ),
-        # --- weight-only (GPTQ baseline shape, Table V "W4A16") ---
-        "w4a16": QuantPolicy(
-            name=key, input=None, weight=_abfp("int4", n), attn_bmm=False,
-        ),
-        # --- beyond-paper: native int8 compute ---
-        "w8a8_int8_native": QuantPolicy(
-            name=key, input=_abfp("int8", n), weight=_abfp("int8", n),
-            attn_bmm=False, compute="int8",
-        ),
-        "w4a8_int8_native": QuantPolicy(
-            name=key, input=_abfp("int8", n), weight=_abfp("int4", n),
-            attn_bmm=False, compute="int8",
-        ),
-    }
+    if key in _MIXED_FACTORIES:
+        return _MIXED_FACTORIES[key](n, n_layers)
     if key.endswith("_qat"):
-        base = table.get(key[: -len("_qat")])
-        if base is not None:
-            return base.with_ste(True)
+        base = key[: -len("_qat")]
+        if base in _MIXED_FACTORIES:
+            return _MIXED_FACTORIES[base](n, n_layers).with_ste(True)
+        if base not in _PRESET_FACTORIES:
+            raise ValueError(
+                f"unknown QAT preset {name!r}: base {base!r} is not a known "
+                f"policy; known bases: {sorted(_PRESET_FACTORIES)} "
+                f"(+ mixed: {sorted(_MIXED_FACTORIES)})"
+            )
+        return _PRESET_FACTORIES[base](n).with_ste(True)
     try:
-        return table[key]
+        return _PRESET_FACTORIES[key](n)
     except KeyError as e:
         raise ValueError(
-            f"unknown policy preset {name!r}; known: {sorted(table)} "
-            "(+ '_qat' suffixes, 'fp32')"
+            f"unknown policy preset {name!r}; known: "
+            f"{sorted(_PRESET_FACTORIES)} (+ mixed: "
+            f"{sorted(_MIXED_FACTORIES)}, '_qat' suffixes, 'fp32')"
         ) from e

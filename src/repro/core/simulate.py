@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import abfp as abfp_mod
 from repro.core.calibration import Calibrator
-from repro.core.policy import QuantPolicy, TensorQuant
+from repro.core.policy import Policy, TensorQuant, resolve_policy
 from repro.core.quantize import maybe_ste
 
 
@@ -119,7 +119,7 @@ def _int8_group_matmul(x, w, tq_in: TensorQuant, tq_w: TensorQuant):
 def qmatmul(
     x: jnp.ndarray,
     w: jnp.ndarray,
-    policy: QuantPolicy,
+    policy: Policy,
     *,
     site: str = "",
     in_alpha=None,
@@ -130,7 +130,11 @@ def qmatmul(
 
     Layers with multi-dim contractions flatten to this canonical form first
     (see nn.linear.DenseGeneral) so the kernels and the int8 path stay simple.
+    A site-addressed PolicyMap is resolved here against ``site`` — the one
+    chokepoint where per-site mixed precision takes effect (resolution is on
+    static strings at trace time; the compiled graph sees a flat policy).
     """
+    policy = resolve_policy(policy, site)
     if type(w).__name__ == "CompressedKernel":
         # int8-stored serving weights (models/serving_transforms): lazily
         # reconstituted here — the one chokepoint every layer routes through.

@@ -31,7 +31,16 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ArchConfig, ShapeSpec
-from repro.core.policy import QuantPolicy, preset
+from repro.core.policy import (
+    Policy,
+    QuantPolicy,
+    has_layer_rules,
+    kv_cache_mode,
+    policies_of,
+    preset,
+    replace_enabled,
+    with_kv_cache,
+)
 from repro.dist import sharding as shd
 from repro.launch import roofline as rf
 from repro.launch import specs as sp
@@ -48,7 +57,7 @@ ASSIGNED = [
 ]
 
 
-def build_cell(cfg: ArchConfig, shape: ShapeSpec, policy: QuantPolicy,
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, policy: Policy,
                mesh, rules, microbatches: int = 1,
                compress: bool = False):
     """Returns (fn, args_sds, in_shardings, out_shardings, donate)."""
@@ -104,7 +113,7 @@ def build_cell(cfg: ArchConfig, shape: ShapeSpec, policy: QuantPolicy,
         donate = ()
     else:  # decode
         state_sds = sp.eval_decode_state(
-            model, cfg, shape, kv_quant=(policy.kv_cache == "int8"))
+            model, cfg, shape, kv_quant=(kv_cache_mode(policy) == "int8"))
         state_axes = sp.decode_state_axes(cfg, state_sds)
         state_sh = sp.shardings_from_axes(state_axes, mesh, rules, state_sds)
         tok_sds, tok_axes = sp.token_spec(cfg, shape.global_batch)
@@ -137,17 +146,28 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         cfg = cfg.replace(remat=remat)
     if logits_chunk is not None:
         cfg = cfg.replace(logits_chunk=logits_chunk)
-    policy = preset(policy_name)
+    policy = preset(policy_name, n_layers=cfg.n_layers)
+    if has_layer_rules(policy):
+        # layer-indexed PolicyMap rules need per-layer sites: compile the
+        # artifact unrolled (same constraint as calibration).  Slower
+        # compile, but the cost accounting becomes exact (no while-loop
+        # extrapolation caveat).
+        cfg = cfg.replace(scan_layers=False)
     if policy.enabled and shape.kind == "train":
         policy = policy.with_ste(True)  # QAT mode for training graphs
     if compute is not None and policy.enabled:
-        policy = policy.replace(compute=compute)
-
+        policy = replace_enabled(policy, compute=compute)
+    # kv storage is structural: set it on every entry, fp32 rules included
     if kv_on_write and policy.enabled:
-        policy = policy.replace(kv_cache="on_write")
+        policy = with_kv_cache(policy, "on_write")
     if kv_int8 and policy.enabled:
-        policy = policy.replace(kv_cache="int8")
-    if prequant and policy.enabled and policy.weight is not None:
+        policy = with_kv_cache(policy, "int8")
+    # per-site weight/activation bit-widths of the *resolved* map — recorded
+    # before serving transforms strip the weight quantizer from the runtime
+    # policy (the stored weights keep their offline format either way)
+    policy_bits = rf.policy_bits_report(cfg, policy)
+    if prequant and policy.enabled and any(
+            p.weight is not None for p in policies_of(policy)):
         # serving mode: weights pre-quantized offline, no runtime weight QDQ
         from repro.models.serving_transforms import serving_policy
 
@@ -160,6 +180,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
         "chips": mesh.devices.size,
         "policy": policy.name, "remat": cfg.remat,
+        "scan_layers": cfg.scan_layers,
+        "policy_bits": policy_bits,
         "microbatches": microbatches, "tag": tag,
         "strategy": strategy, "prequant": prequant,
         "compress": compress, "kv_on_write": kv_on_write,
@@ -182,32 +204,48 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         memory = rf.memory_dict(compiled)
         scan_cost = rf.extract_costs(compiled)
 
-        # ---- pass 2: cost accounting via layer extrapolation ------------
+        # ---- pass 2: cost accounting ------------------------------------
         # XLA cost analysis counts a while-loop body once, so compile small
         # UNROLLED variants at k and 2k layers (k = layer-pattern period)
-        # and extrapolate affinely — exact, since cost is linear in depth.
-        k = 1
-        if cfg.alt_local_global:
-            k = 2
-        if cfg.family == "hybrid":
-            k = cfg.shared_attn_every
-        periods = cfg.n_layers // k
-        costs2 = {}
-        for mult in (1, 2):
-            kw = dict(n_layers=k * mult, scan_layers=False)
-            if cfg.family == "encdec":
-                kw["encoder_layers"] = k * mult
-            small = cfg.replace(**kw)
-            sfn, sargs, sin, sout, sdon = build_cell(
-                small, shape, policy, mesh, rules, microbatches,
-                compress=compress)
-            with mesh, shd.use_rules(mesh, rules):
-                scomp = jax.jit(
-                    sfn, in_shardings=sin, out_shardings=sout,
-                    donate_argnums=sdon).lower(*sargs).compile()
-            costs2[mult] = rf.extract_costs(scomp)
+        # and extrapolate affinely — exact when layers are cost-uniform.
+        # Layer-indexed PolicyMaps break that uniformity (endcap layers cost
+        # differently than interior ones) AND already force pass 1 to
+        # compile fully unrolled, so there pass 1's own cost analysis is the
+        # exact accounting and the extrapolation pass is skipped.
+        if has_layer_rules(policy):
+            ext = {
+                "flops": scan_cost["flops"],
+                "bytes": scan_cost["bytes"],
+                "collective_bytes": scan_cost["collective_bytes"],
+                "source": "unrolled_pass1",
+            }
+            collectives_rec = {"collectives_full_unrolled":
+                               scan_cost["collectives"]}
+        else:
+            k = 1
+            if cfg.alt_local_global:
+                k = 2
+            if cfg.family == "hybrid":
+                k = cfg.shared_attn_every
+            periods = cfg.n_layers // k
+            costs2 = {}
+            for mult in (1, 2):
+                kw = dict(n_layers=k * mult, scan_layers=False)
+                if cfg.family == "encdec":
+                    kw["encoder_layers"] = k * mult
+                small = cfg.replace(**kw)
+                sfn, sargs, sin, sout, sdon = build_cell(
+                    small, shape, policy, mesh, rules, microbatches,
+                    compress=compress)
+                with mesh, shd.use_rules(mesh, rules):
+                    scomp = jax.jit(
+                        sfn, in_shardings=sin, out_shardings=sout,
+                        donate_argnums=sdon).lower(*sargs).compile()
+                costs2[mult] = rf.extract_costs(scomp)
+            ext = rf.extrapolate(costs2[1], costs2[2], periods)
+            collectives_rec = {"collectives_unrolled_2k":
+                               costs2[2]["collectives"]}
         t3 = time.time()
-        ext = rf.extrapolate(costs2[1], costs2[2], periods)
 
         flops = ext["flops"]
         bytes_acc = ext["bytes"]
@@ -222,7 +260,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             flops_per_device=flops,
             bytes_per_device=bytes_acc,
             collective_bytes_per_device=coll_b,
-            collectives_unrolled_2k=costs2[2]["collectives"],
+            **collectives_rec,
             scan_artifact_costs=scan_cost,
             extrapolation={k2: v for k2, v in ext.items()},
             memory=memory,
@@ -294,13 +332,15 @@ def main() -> int:
         status = rec["status"]
         if status == "ok":
             t = rec["terms"]
+            pb = rec.get("policy_bits", {})
             print(
                 f"[{status}] {arch} {shape} "
                 f"({'mp' if args.multi_pod else 'sp'}): "
                 f"compile={rec['compile_s']}s "
                 f"flops/dev={rec['flops_per_device']:.3e} "
                 f"hbm/dev={rec['hbm_gb_per_device']}GB "
-                f"dom={t['dominant']}",
+                f"dom={t['dominant']} "
+                f"wbits={pb.get('mean_weight_bits', 0):.2f}",
                 flush=True,
             )
         elif status == "skipped":

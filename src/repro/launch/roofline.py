@@ -167,6 +167,145 @@ def roofline_terms(flops: float, bytes_accessed: float,
     }
 
 
+# ---------------------------------------------------------------------------
+# Per-site bit-width accounting (site-addressed PolicyMap cost model)
+# ---------------------------------------------------------------------------
+_GATED_ACTS = ("swiglu", "geglu", "reglu")
+
+
+def enumerate_matmul_sites(cfg) -> list:
+    """[(site_address, K, N, multiplicity)] for every quantized matmul.
+
+    Follows the site-name contract the layers thread to ``qmatmul`` (eager
+    unrolled naming, ``blocks.{i}/...`` for lm/vit/ssm/moe; family-level
+    names ``attn/... mlp/... cross/... shared/... mamba/...`` for
+    encdec/hybrid, which never thread layer indices).  K*N*multiplicity is
+    the weight parameter count at the site, so per-site bit-widths
+    integrate into a weight-bits budget.
+    """
+    d, f, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    hd = cfg.head_dim_
+    sites = []
+
+    if cfg.family == "hybrid":
+        # mamba blocks share family-level names (no layer index); the
+        # shared attention block is counted once (zamba2 weight sharing)
+        di = cfg.ssm_expand * d
+        proj = (2 * di + 2 * cfg.ssm_groups * cfg.ssm_state
+                + di // cfg.ssm_head_dim)
+        n_shared = L // cfg.shared_attn_every if cfg.shared_attn_every else 0
+        n_mamba = L - n_shared
+        n_wi = 2 if cfg.act in _GATED_ACTS else 1
+        sites = [
+            ("mamba/in_proj", d, proj, n_mamba),
+            ("mamba/out_proj", di, d, n_mamba),
+            ("shared/q", 2 * d, cfg.n_heads * hd, 1),
+            ("shared/k", 2 * d, cfg.n_kv * hd, 1),
+            ("shared/v", 2 * d, cfg.n_kv * hd, 1),
+            ("shared/o", cfg.n_heads * hd, d, 1),
+            ("mlp/wi", d, f, n_wi),
+            ("mlp/wo", f, d, 1),
+            ("embed/attend", d, cfg.vocab_padded, 1),
+        ]
+        return sites
+
+    if cfg.family == "encdec":
+        # encoder self-attn + decoder self-attn + decoder cross-attn all
+        # share the generic 'attn' site (same Attention module/name);
+        # cross K/V projections are addressed as 'cross/{k,v}'
+        E, Ld = cfg.encoder_layers, L
+        n_attn = E + 2 * Ld
+        n_wi = 2 if cfg.act in _GATED_ACTS else 1
+        sites = [
+            ("attn/q", d, cfg.n_heads * hd, n_attn),
+            ("attn/k", d, cfg.n_kv * hd, E + Ld),  # cross K/V separate
+            ("attn/v", d, cfg.n_kv * hd, E + Ld),
+            ("attn/o", cfg.n_heads * hd, d, n_attn),
+            ("cross/k", d, cfg.n_kv * hd, Ld),
+            ("cross/v", d, cfg.n_kv * hd, Ld),
+            ("mlp/wi", d, f, n_wi * (E + Ld)),
+            ("mlp/wo", f, d, E + Ld),
+            ("embed/attend", d, cfg.vocab_padded, 1),
+        ]
+        return sites
+
+    def block_sites(i: int):
+        out = []
+        if cfg.family == "ssm" or (cfg.ssm_state > 0 and cfg.family != "hybrid"):
+            di = cfg.ssm_expand * d
+            proj = (2 * di + 2 * cfg.ssm_groups * cfg.ssm_state
+                    + di // cfg.ssm_head_dim)
+            out.append((f"blocks.{i}/mamba/in_proj", d, proj, 1))
+            out.append((f"blocks.{i}/mamba/out_proj", di, d, 1))
+            return out
+        out.append((f"blocks.{i}/attn/q", d, cfg.n_heads * hd, 1))
+        out.append((f"blocks.{i}/attn/k", d, cfg.n_kv * hd, 1))
+        out.append((f"blocks.{i}/attn/v", d, cfg.n_kv * hd, 1))
+        out.append((f"blocks.{i}/attn/o", cfg.n_heads * hd, d, 1))
+        n_wi = 2 if cfg.act in _GATED_ACTS else 1  # wi (+ wg)
+        if cfg.family == "moe" and cfg.n_experts > 0:
+            out.append((f"blocks.{i}/ffn", d, f, n_wi * cfg.n_experts))
+            out.append((f"blocks.{i}/ffn", f, d, cfg.n_experts))
+        else:
+            out.append((f"blocks.{i}/ffn/wi", d, f, 1))
+            if n_wi == 2:
+                out.append((f"blocks.{i}/ffn/wg", d, f, 1))
+            out.append((f"blocks.{i}/ffn/wo", f, d, 1))
+        return out
+
+    if cfg.family == "vit":
+        sites.append(("patch_embed", cfg.patch_size**2 * cfg.n_channels, d, 1))
+        for i in range(L):
+            sites.extend(block_sites(i))
+        from repro.configs.base import pad_to
+
+        sites.append(("head", d, pad_to(cfg.n_classes, 128), 1))
+        return sites
+
+    for i in range(L):
+        sites.extend(block_sites(i))
+    if cfg.tied_embeddings:
+        sites.append(("embed/attend", d, cfg.vocab_padded, 1))
+    else:
+        sites.append(("lm_head", d, cfg.vocab_padded, 1))
+    return sites
+
+
+def policy_bits_report(cfg, policy, unquant_bits: int = 16) -> dict:
+    """Resolve ``policy`` at every matmul site and integrate bit-widths.
+
+    Returns per-site weight/activation bits plus the aggregate weight-bits
+    budget — the cost-model view of a site-addressed PolicyMap (what the
+    dry-run records next to the XLA roofline terms).  Unquantized tensors
+    are charged ``unquant_bits`` (bf16 serving dtype).
+    """
+    from repro.core.policy import resolve_policy
+
+    per_site = []
+    total_bits = 0.0
+    total_params = 0
+    for site, K, N, mult in enumerate_matmul_sites(cfg):
+        pol = resolve_policy(policy, site)
+        w_bits = pol.weight.fmt.bits if pol.weight is not None else unquant_bits
+        a_bits = pol.input.fmt.bits if pol.input is not None else unquant_bits
+        n_params = K * N * mult
+        per_site.append({
+            "site": site,
+            "policy": pol.name,
+            "w_bits": w_bits,
+            "a_bits": a_bits,
+            "params": n_params,
+        })
+        total_bits += n_params * w_bits
+        total_params += n_params
+    return {
+        "sites": per_site,
+        "total_weight_bits": total_bits,
+        "total_weight_params": total_params,
+        "mean_weight_bits": total_bits / max(total_params, 1),
+    }
+
+
 def model_flops(cfg, shape, chips: int) -> float:
     """Analytic 6·N·D (train) / 2·N·D (inference fwd), per chip."""
     n = cfg.n_active_params() if cfg.family == "moe" else cfg.n_params()

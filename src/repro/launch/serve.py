@@ -43,11 +43,18 @@ def main() -> int:
             "decode. Use `python -m benchmarks.run --only vit_table`.")
     if args.reduced:
         cfg = cfg.reduced()
+
+    from repro.core.policy import has_layer_rules
+
+    policy = preset(args.policy, n_layers=cfg.n_layers)
+    if has_layer_rules(policy):
+        # layer-indexed PolicyMap rules need per-layer sites (eager unroll)
+        cfg = cfg.replace(scan_layers=False)
     model = build_model(cfg)
     params = unbox(model.init(jax.random.PRNGKey(args.seed)))
     engine = ServeEngine(
         model, params, n_slots=args.n_slots, max_len=args.max_len,
-        policy=preset(args.policy),
+        policy=policy,
     )
 
     rng = np.random.RandomState(args.seed)

@@ -70,12 +70,18 @@ def make_everything(args):
             "vit_table` for the ViT workload.")
     if args.reduced:
         cfg = cfg.reduced()
-    model = build_model(cfg)
-    params = unbox(model.init(jax.random.PRNGKey(args.seed)))
 
-    policy = preset(args.policy, n=args.abfp_n)
+    from repro.core.policy import has_layer_rules
+
+    policy = preset(args.policy, n=args.abfp_n, n_layers=cfg.n_layers)
+    if has_layer_rules(policy):
+        # layer-indexed PolicyMap rules need per-layer sites (eager unroll)
+        cfg = cfg.replace(scan_layers=False)
     if args.qat and policy.enabled:
         policy = policy.with_ste(True)
+
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(args.seed)))
 
     if args.corpus_path:
         stream = text_corpus(args.corpus_path)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.policy import QuantPolicy
+from repro.core.policy import QuantPolicy, reject_layer_rules
 from repro.dist import sharding as shd
 from repro.nn.attention import Attention, KVCache
 from repro.nn.ffn import MLP
@@ -165,6 +165,7 @@ class EncDecLM:
               q=None, return_hidden=False):
         """Teacher-forcing train/eval: encode frames, decode tokens."""
         c = self.cfg
+        reject_layer_rules(policy, "EncDecLM")
         assert frames is not None, "encdec requires 'frames' input"
         enc, enc_pos = self.encode(params, frames, policy)
         B, S = tokens.shape
@@ -204,6 +205,7 @@ class EncDecLM:
     def prefill(self, params, tokens, *, frames=None, policy=QuantPolicy(),
                 max_len: int | None = None):
         c = self.cfg
+        reject_layer_rules(policy, "EncDecLM")
         assert frames is not None
         enc, enc_pos = self.encode(params, frames, policy)
         B, S = tokens.shape
@@ -252,6 +254,7 @@ class EncDecLM:
     def decode_step(self, params, token, state: EncDecState, *,
                     policy=QuantPolicy(), q=None):
         c = self.cfg
+        reject_layer_rules(policy, "EncDecLM")
         emb = Embed(c.vocab_padded, c.d_model, param_dtype=c.param_dtype,
                     dtype=c.dtype)
         x = emb.apply(params["embed"], token)

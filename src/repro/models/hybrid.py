@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.policy import QuantPolicy
+from repro.core.policy import QuantPolicy, reject_layer_rules
 from repro.core.simulate import qmatmul
 from repro.dist import sharding as shd
 from repro.nn.attention import Attention, KVCache
@@ -217,6 +217,7 @@ class HybridLM:
               return_hidden: bool = False, prefix_embeds=None):
         del prefix_embeds
         c = self.cfg
+        reject_layer_rules(policy, "HybridLM")
         emb = Embed(c.vocab_padded, c.d_model, param_dtype=c.param_dtype,
                     dtype=c.dtype)
         x = emb.apply(params["embed"], tokens)
@@ -264,6 +265,7 @@ class HybridLM:
     def prefill(self, params, tokens, *, policy=QuantPolicy(),
                 max_len: int | None = None):
         c = self.cfg
+        reject_layer_rules(policy, "HybridLM")
         emb = Embed(c.vocab_padded, c.d_model, param_dtype=c.param_dtype,
                     dtype=c.dtype)
         x = emb.apply(params["embed"], tokens)
@@ -346,6 +348,7 @@ class HybridLM:
     def decode_step(self, params, token, state: HybridState, *,
                     policy=QuantPolicy(), q=None):
         c = self.cfg
+        reject_layer_rules(policy, "HybridLM")
         emb = Embed(c.vocab_padded, c.d_model, param_dtype=c.param_dtype,
                     dtype=c.dtype)
         x = emb.apply(params["embed"], token)

@@ -6,6 +6,12 @@ Calibration note: PTQ calibration (Calibrator observers) requires eager
 per-layer execution — run with ``cfg.scan_layers=False`` (unrolled) and no
 jit so observation sites fire per layer.  Scan mode is for training/serving
 at scale where calibration state is already solved.
+
+Policy note: ``policy`` may be a flat QuantPolicy or a site-addressed
+PolicyMap.  Layer-indexed rules (``blocks.3/...``) need the same unrolled
+execution as calibration — all three entry points (apply / prefill /
+decode_step) thread ``blocks.{i}`` site names when ``scan_layers=False``
+and raise on layer-indexed rules under scan.
 """
 
 from __future__ import annotations
@@ -17,7 +23,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.policy import QuantPolicy
+from repro.core.policy import (
+    QuantPolicy,
+    check_scan_compatible,
+    kv_cache_mode,
+)
 from repro.dist import sharding as shd
 from repro.nn.attention import Attention, KVCache
 from repro.nn.ffn import MLP
@@ -207,6 +217,7 @@ class TransformerLM:
 
     def _run_blocks(self, params, x, positions, policy, q=None):
         c = self.cfg
+        check_scan_compatible(policy, c.scan_layers, c.name)
         windows = self.layer_windows(x.shape[1])
         aux0 = jnp.zeros((), jnp.float32)
         if c.scan_layers:
@@ -228,20 +239,21 @@ class TransformerLM:
             return x, aux
         aux = aux0
         wl = self.layer_windows_py()
-        block_fn = self._block_apply
+        block_fn_w = None
         if c.remat != "none":
             pol = (jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
                    if c.remat == "dots" else None)
-            block_fn = jax.checkpoint(
-                lambda bp, xc, w, qi: self._block_apply(
-                    bp, xc, positions, w, policy, qi),
-                policy=pol)
-            block_fn_w = block_fn
+            # name is static (site addressing must survive remat — a
+            # layer-indexed PolicyMap resolves per block here too)
+            block_fn_w = jax.checkpoint(
+                lambda name, bp, xc, w, qi: self._block_apply(
+                    bp, xc, positions, w, policy, qi, name=name),
+                policy=pol, static_argnums=(0,))
         for i, bp in enumerate(params["blocks"]):
             qi = None if q is None else q["blocks"][i]
             w = jnp.asarray(int(wl[i]), jnp.int32)
             if c.remat != "none":
-                x, a = block_fn_w(bp, x, w, qi)
+                x, a = block_fn_w(f"blocks.{i}", bp, x, w, qi)
             else:
                 x, a = self._block_apply(bp, x, positions, w, policy, qi,
                                          name=f"blocks.{i}")
@@ -309,53 +321,57 @@ class TransformerLM:
         Returns (last-position logits (B, vocab_padded), DecodeState).
         """
         c = self.cfg
+        check_scan_compatible(policy, c.scan_layers, c.name)
+        kv_cache_mode(policy)  # cache storage is engine-global: reject
+        # maps whose rules disagree on it with a clear error here, not a
+        # pytree-mismatch crash when the per-layer caches get stacked
         x, positions = self._embed_in(params, tokens, prefix_embeds)
         B, S = x.shape[0], x.shape[1]
         max_len = max_len or S
         windows = self.layer_windows(S)
-        attn = None if self.is_ssm else self._attention()
         eff_window = c.window if (c.window and not c.alt_local_global) \
             else None
         cache_size = max_len if eff_window is None \
             else min(max_len, eff_window)
 
         if self.is_ssm:
-            def body(carry, xs):
+            def body(carry, xs, name="block"):
                 xc = carry
                 bp = xs
                 h = _norm(c).apply(bp["ln"], xc)
-                h, cache = self._mamba().apply(bp["mamba"], h, policy,
-                                               return_cache=True)
+                h, cache = self._mamba(f"{name}/mamba").apply(
+                    bp["mamba"], h, policy, return_cache=True)
                 return xc + h, cache
 
             if c.scan_layers:
                 x, ssm = jax.lax.scan(body, x, params["blocks"])
             else:
                 caches = []
-                for bp in params["blocks"]:
-                    x, cc = body(x, bp)
+                for i, bp in enumerate(params["blocks"]):
+                    x, cc = body(x, bp, name=f"blocks.{i}")
                     caches.append(cc)
                 ssm = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *caches)
             state = DecodeState(kv=None, ssm=ssm,
                                 position=jnp.asarray(S, jnp.int32))
         else:
-            def body(carry, xs):
+            def body(carry, xs, name="block"):
                 xc = carry
                 bp, w = xs
+                attn_l = self._attention(f"{name}/attn")
                 h = _norm(c).apply(bp["ln1"], xc)
-                h, (kf, vf) = attn.apply(
+                h, (kf, vf) = attn_l.apply(
                     bp["attn"], h, positions=positions, policy=policy,
                     window=w, return_kv=True,
                 )
-                cache = attn.fill_cache(kf, vf, cache_size, policy=policy)
+                cache = attn_l.fill_cache(kf, vf, cache_size, policy=policy)
                 if c.post_norms:
                     h = _norm(c).apply(bp["ln1_post"], h)
                 xc = xc + h
                 h = _norm(c).apply(bp["ln2"], xc)
                 if self.is_moe:
-                    h, _ = self._moe().apply(bp["ffn"], h, policy)
+                    h, _ = self._moe(f"{name}/ffn").apply(bp["ffn"], h, policy)
                 else:
-                    h = self._mlp().apply(bp["ffn"], h, policy)
+                    h = self._mlp(f"{name}/ffn").apply(bp["ffn"], h, policy)
                 if c.post_norms:
                     h = _norm(c).apply(bp["ln2_post"], h)
                 return xc + h, cache
@@ -366,7 +382,8 @@ class TransformerLM:
                 caches = []
                 wl = self.layer_windows_py()
                 for i, bp in enumerate(params["blocks"]):
-                    x, cc = body(x, (bp, jnp.asarray(int(wl[i]), jnp.int32)))
+                    x, cc = body(x, (bp, jnp.asarray(int(wl[i]), jnp.int32)),
+                                 name=f"blocks.{i}")
                     caches.append(cc)
                 kv = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *caches)
             state = DecodeState(kv=kv, ssm=None,
@@ -404,16 +421,17 @@ class TransformerLM:
                     policy=QuantPolicy(), q=None):
         """token: (B, 1) -> (logits (B, vocab_padded), new state)."""
         c = self.cfg
+        check_scan_compatible(policy, c.scan_layers, c.name)
         x, _ = self._embed_in(params, token, pos_offset=state.position)
         pos = state.position
         windows = self.layer_windows(0)
 
         if self.is_ssm:
-            def body(xc, xs):
+            def body(xc, xs, name="block"):
                 bp, cache = xs
                 h = _norm(c).apply(bp["ln"], xc)
-                h, cache = self._mamba().decode_step(bp["mamba"], h,
-                                                     cache, policy=policy)
+                h, cache = self._mamba(f"{name}/mamba").decode_step(
+                    bp["mamba"], h, cache, policy=policy)
                 return xc + h, cache
 
             if c.scan_layers:
@@ -423,19 +441,16 @@ class TransformerLM:
                 caches = []
                 for i, bp in enumerate(params["blocks"]):
                     ci = jax.tree_util.tree_map(lambda a: a[i], state.ssm)
-                    x, cnew = body(x, (bp, ci))
+                    x, cnew = body(x, (bp, ci), name=f"blocks.{i}")
                     caches.append(cnew)
                 new_ssm = jax.tree_util.tree_map(
                     lambda *a: jnp.stack(a), *caches)
             new_state = DecodeState(kv=None, ssm=new_ssm, position=pos + 1)
         else:
-            def body(xc, xs):
-                if len(xs) == 3:
-                    bp, cache, w = xs
-                else:
-                    bp, cache, w = xs[0], xs[1], xs[2]
+            def body(xc, xs, name="block"):
+                bp, cache, w = xs
                 h = _norm(c).apply(bp["ln1"], xc)
-                attn = self._attention()
+                attn = self._attention(f"{name}/attn")
                 h, cache = attn.decode_step(
                     bp["attn"], h, cache, position=pos, policy=policy,
                     window=w,
@@ -445,9 +460,9 @@ class TransformerLM:
                 xc = xc + h
                 h = _norm(c).apply(bp["ln2"], xc)
                 if self.is_moe:
-                    h, _ = self._moe().apply(bp["ffn"], h, policy)
+                    h, _ = self._moe(f"{name}/ffn").apply(bp["ffn"], h, policy)
                 else:
-                    h = self._mlp().apply(bp["ffn"], h, policy)
+                    h = self._mlp(f"{name}/ffn").apply(bp["ffn"], h, policy)
                 if c.post_norms:
                     h = _norm(c).apply(bp["ln2_post"], h)
                 return xc + h, cache
@@ -465,7 +480,8 @@ class TransformerLM:
                     ci = jax.tree_util.tree_map(lambda a: a[i], state.kv)
                     ci = KVCache(*ci)
                     x, cnew = body(
-                        x, (bp, ci, jnp.asarray(int(wl[i]), jnp.int32)))
+                        x, (bp, ci, jnp.asarray(int(wl[i]), jnp.int32)),
+                        name=f"blocks.{i}")
                     caches.append(cnew)
                 new_kv = jax.tree_util.tree_map(lambda *a: jnp.stack(a),
                                                 *caches)

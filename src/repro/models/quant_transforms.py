@@ -17,6 +17,12 @@ Site-name contract (set by nn.* layer names threaded from models.lm):
     blocks.{i}/ffn/{wi,wo}/in         MLP inputs (wg shares wi's input)
     blocks.{i}/mamba/{in_proj,out_proj}/in
     embed/attend/in                   tied LM head input
+
+Site-addressed PolicyMaps plug in at two points: ``site_address`` maps a
+calibration site to its policy-resolution address, and
+``solve_alphas_for_policy`` / ``static_qtree(calib, policy_map, ...)``
+solve each site's clip range against *its resolved format* (one
+observation pass, per-site solves).
 """
 
 from __future__ import annotations
@@ -33,13 +39,13 @@ from repro.core import smoothquant as sq_mod
 from repro.core.calibration import Calibrator, max_alpha, mse_alpha
 from repro.core.formats import Format
 from repro.core.gptq import GPTQConfig, gptq_quantize
-from repro.core.policy import QuantPolicy
+from repro.core.policy import Policy, PolicyMap, QuantPolicy, resolve_policy
 
 
 # ---------------------------------------------------------------------------
 # Calibration pass
 # ---------------------------------------------------------------------------
-def calibrate(model, params, batches, policy: QuantPolicy,
+def calibrate(model, params, batches, policy: Policy,
               collect_outer: bool = False) -> Calibrator:
     """Run observation passes over ``batches`` (list of batch dicts)."""
     calib = Calibrator(collect_outer=collect_outer)
@@ -52,6 +58,47 @@ def calibrate(model, params, batches, policy: QuantPolicy,
 def solve_alphas(calib: Calibrator, fmt: Format, method: str = "mse",
                  per_channel: bool = False) -> dict:
     return calib.solve(fmt, method=method, per_channel=per_channel)
+
+
+def site_address(calib_site: str) -> str:
+    """Calibration site name -> PolicyMap resolution address.
+
+    Linear inputs drop the trailing ``/in``; attention BMM operands and
+    probabilities resolve at the owning attention block (where the layer
+    reads ``attn_bmm`` off its resolved policy).
+    """
+    if calib_site.endswith("/in"):
+        return calib_site[: -len("/in")]
+    head, _, leaf = calib_site.rpartition("/")
+    if leaf.startswith("bmm_") or leaf == "probs":
+        return head
+    return calib_site
+
+
+def solve_alphas_for_policy(calib: Calibrator, policy: Policy,
+                            method: str = "mse",
+                            per_channel: bool = False) -> dict:
+    """Per-site alphas where each site solves for *its* resolved format.
+
+    The mixed-precision counterpart of ``solve_alphas``: with a PolicyMap a
+    W8A8 endcap block grid-searches its clip range against INT8 while the
+    W4A4 interior searches against INT4 — one calibration pass, per-site
+    solves.  Sites whose resolved policy has no input quantizer (fp32
+    rules) are skipped.
+    """
+    out = {}
+    for site, st in calib.stats.items():
+        pol = resolve_policy(policy, site_address(site))
+        tq = pol.input
+        if tq is None:
+            continue
+        if method == "max":
+            out[site] = max_alpha(st, per_channel=per_channel)
+        elif method == "mse":
+            out[site] = mse_alpha(st, tq.fmt, per_channel=per_channel)
+        else:
+            raise ValueError(f"unknown calibration method {method!r}")
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -70,19 +117,24 @@ _LEAF_KEY = {
 }
 
 
-def build_qtree(n_layers: int, alphas: dict) -> dict:
-    """{site: alpha} -> q tree matching TransformerLM.apply(q=...).
+def build_qtree(n_layers: int, alphas: dict) -> tuple[dict, tuple]:
+    """{site: alpha} -> (q tree matching TransformerLM.apply(q=...), dropped).
 
-    Unmatched sites (e.g. embed/attend) are skipped — those fall back to
-    dynamic-max, which the benchmark methodology documents.
+    ``dropped`` reports the calibration sites that could not be placed in
+    the block tree (e.g. ``embed/attend/in``, out-of-range layer indices,
+    unknown leaves) — those fall back to dynamic-max at eval.  Callers
+    surface the report instead of silently losing sites.
     """
     blocks = [dict() for _ in range(n_layers)]
+    dropped = []
     for site, alpha in alphas.items():
         m = _SITE_RE.match(site)
         if not m:
+            dropped.append(site)
             continue
         i, group, leaf = int(m.group(1)), m.group(2), m.group(3)
-        if leaf not in _LEAF_KEY:
+        if leaf not in _LEAF_KEY or i >= n_layers:
+            dropped.append(site)
             continue
         blocks[i].setdefault(group, {})[_LEAF_KEY[leaf]] = {
             "in_alpha": jnp.asarray(alpha)
@@ -91,13 +143,26 @@ def build_qtree(n_layers: int, alphas: dict) -> dict:
         ffn = b.get("ffn")
         if ffn and "wi" in ffn and "wg" not in ffn:
             ffn["wg"] = ffn["wi"]  # gate sees the same input as wi
-    return {"blocks": blocks}
+    return {"blocks": blocks}, tuple(sorted(dropped))
 
 
-def static_qtree(calib: Calibrator, fmt: Format, n_layers: int,
-                 method: str = "mse") -> dict:
-    """The paper's static activation calibration (§II-B1) as a q tree."""
-    return build_qtree(n_layers, solve_alphas(calib, fmt, method=method))
+def static_qtree(calib: Calibrator, fmt, n_layers: int,
+                 method: str = "mse", return_report: bool = False):
+    """The paper's static activation calibration (§II-B1) as a q tree.
+
+    ``fmt`` is either a single Format (every site solves against it) or a
+    flat-policy/PolicyMap (each site solves against its *resolved* input
+    format — the mixed-precision path).  With ``return_report=True`` also
+    returns the dropped-site report from ``build_qtree``.
+    """
+    if isinstance(fmt, (QuantPolicy, PolicyMap)):
+        alphas = solve_alphas_for_policy(calib, fmt, method=method)
+    else:
+        alphas = solve_alphas(calib, fmt, method=method)
+    tree, dropped = build_qtree(n_layers, alphas)
+    if return_report:
+        return tree, dropped
+    return tree
 
 
 # ---------------------------------------------------------------------------
@@ -252,4 +317,5 @@ def rptq_qtree(calib: Calibrator, n_layers: int,
         res = rptq_mod.solve(st.ch_min, st.ch_max, num_clusters=num_clusters)
         alphas[site] = res.alpha_per_channel
         perms[site] = res.perm
-    return build_qtree(n_layers, alphas), perms
+    tree, _ = build_qtree(n_layers, alphas)
+    return tree, perms

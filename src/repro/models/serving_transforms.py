@@ -28,7 +28,35 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import abfp as abfp_mod
-from repro.core.policy import QuantPolicy
+from repro.core.policy import (
+    Policy,
+    PolicyMap,
+    QuantPolicy,
+    TensorQuant,
+    map_policies,
+)
+
+
+def _uniform_weight_quant(policy: Policy) -> TensorQuant | None:
+    """The single weight quantizer shared by every enabled site.
+
+    The offline weight transforms walk ``kernel`` leaves without site
+    addresses, so a PolicyMap must be weight-uniform to use them;
+    site-heterogeneous weight storage is rejected with a clear error rather
+    than silently compressing every kernel with one rule's format.
+    """
+    if isinstance(policy, QuantPolicy):
+        return policy.weight
+    # include disabled (fp32) rules: an fp32 site's weight must NOT be
+    # quantized/compressed, so {None, int4} is heterogeneous too
+    tqs = {p.weight for p in policy.policies}
+    if len(tqs) > 1:
+        raise NotImplementedError(
+            f"PolicyMap {policy.name!r} mixes weight quantizers across "
+            "sites (fp32 rules count); offline prequantize/compress need a "
+            "weight-uniform map (per-site compressed storage is future work)"
+        )
+    return tqs.pop() if tqs else None
 
 
 @jax.tree_util.register_pytree_node_class
@@ -83,9 +111,9 @@ def _walk_kernels(params, fn):
     return rec(params)
 
 
-def prequantize_weights(params, policy: QuantPolicy):
+def prequantize_weights(params, policy: Policy):
     """QDQ every kernel offline per ``policy.weight``; see module doc."""
-    tq = policy.weight
+    tq = _uniform_weight_quant(policy)
     if tq is None:
         return params
     assert tq.scaler == "abfp", "prequantize supports the ABFP weight path"
@@ -100,19 +128,30 @@ def prequantize_weights(params, policy: QuantPolicy):
     return _walk_kernels(params, one)
 
 
-def serving_policy(policy: QuantPolicy) -> QuantPolicy:
-    """The runtime policy to pair with prequantized/compressed weights."""
-    if policy.weight is None:
-        return policy
-    return policy.replace(name=policy.name + "_served", weight=None)
+def serving_policy(policy: Policy) -> Policy:
+    """The runtime policy to pair with prequantized/compressed weights.
+
+    Maps are handled rule-wise: every entry drops its weight quantizer.
+    """
+    def drop_weight(p: QuantPolicy) -> QuantPolicy:
+        if p.weight is None:
+            return p
+        return p.replace(name=p.name + "_served", weight=None)
+
+    if isinstance(policy, PolicyMap):
+        if all(p.weight is None for p in policy.policies):
+            return policy
+        return policy.map_policies(drop_weight,
+                                   name=policy.name + "_served")
+    return map_policies(policy, drop_weight)
 
 
 # ---------------------------------------------------------------------------
 # Real compressed storage: int codes + scales
 # ---------------------------------------------------------------------------
-def compress_weights(params, policy: QuantPolicy):
+def compress_weights(params, policy: Policy):
     """kernel -> CompressedKernel(int8 codes, bf16 unit scales)."""
-    tq = policy.weight
+    tq = _uniform_weight_quant(policy)
     assert tq is not None and tq.scaler == "abfp"
 
     def one(w):

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, pad_to
-from repro.core.policy import QuantPolicy
+from repro.core.policy import QuantPolicy, check_scan_compatible
 from repro.dist import sharding as shd
 from repro.nn.attention import Attention
 from repro.nn.ffn import MLP
@@ -143,6 +143,7 @@ class VisionTransformer:
 
     def _run_blocks(self, params, x, positions, policy, q=None):
         c = self.cfg
+        check_scan_compatible(policy, c.scan_layers, c.name)
         if c.scan_layers:
             def body(xc, xs):
                 if q is None:

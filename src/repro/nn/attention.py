@@ -23,7 +23,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import QuantPolicy
+from repro.core.policy import Policy, resolve_policy
 from repro.core.simulate import qdq_activation
 from repro.dist import sharding as shd
 from repro.nn.linear import Dense
@@ -150,13 +150,15 @@ class Attention:
             else self.head_dim**-0.5
         )
 
-    def _maybe_quant_qkv(self, policy: QuantPolicy, qh, kh, vh,
+    def _maybe_quant_qkv(self, policy: Policy, qh, kh, vh,
                          q: dict | None = None, skip_kv: bool = False):
         """QDQ attention-BMM operands along their contraction dims:
         q,k along head_dim (QK^T); v along its seq axis (probs@V).
         ``q``: optional static alphas {'bmm_q': {'in_alpha': ...}, ...}.
         ``skip_kv``: cache entries were quantized at write time (policy
-        kv_cache='on_write') — only q needs QDQ here."""
+        kv_cache='on_write') — only q needs QDQ here.
+        BMM operands resolve the policy at the block site (``self.name``)."""
+        policy = resolve_policy(policy, self.name)
         if not (policy.enabled and policy.attn_bmm and policy.input):
             return qh, kh, vh
         tq = policy.input
@@ -174,6 +176,7 @@ class Attention:
     # -------------------------------------------------- reference attention
     def _reference(self, qh, kh, vh, q_pos, kv_pos, window, policy,
                    q=None, kv_prequant: bool = False):
+        policy = resolve_policy(policy, self.name)
         G = self.n_heads // self.n_kv
         B, S, H, D = qh.shape
         T = kh.shape[1]
@@ -217,6 +220,7 @@ class Attention:
     # -------------------------------------------------- blockwise attention
     def _blockwise(self, qh, kh, vh, q_pos, kv_pos, window, policy,
                    q=None):
+        policy = resolve_policy(policy, self.name)
         B, S, H, D = qh.shape
         T = kh.shape[1]
         qb, kb = min(self.q_block, S), min(self.kv_block, T)
@@ -282,13 +286,19 @@ class Attention:
         x: jnp.ndarray,
         *,
         positions: jnp.ndarray,
-        policy: QuantPolicy,
+        policy: Policy,
         window=None,
         q: dict | None = None,
         kv_override: tuple | None = None,  # (k, v, kv_positions) for cross
         return_kv: bool = False,
     ) -> jnp.ndarray:
-        """Full-sequence attention (training / prefill)."""
+        """Full-sequence attention (training / prefill).
+
+        ``policy`` may be a PolicyMap: block-level decisions (BMM quant,
+        flash eligibility, KV handling) resolve at ``self.name`` while the
+        q/k/v/o projections resolve at their own sub-sites inside qmatmul.
+        """
+        pol = resolve_policy(policy, self.name)
         B, S, _ = x.shape
         qh, kh, vh = self._project_qkv(params, x, positions, policy, q)
         kv_pos = positions
@@ -307,8 +317,8 @@ class Attention:
             and self.softcap is None
             and kv_override is None
             and S == T  # self-attention, standard causal layout
-            and not (policy.enabled and policy.attn_bmm
-                     and policy.input is not None)
+            and not (pol.enabled and pol.attn_bmm
+                     and pol.input is not None)
         )
         if flash_ok:
             from repro.kernels import ops as kops
@@ -337,12 +347,14 @@ class Attention:
         return y
 
     def fill_cache(self, kh_flat, vh_flat, size: int,
-                   policy: QuantPolicy | None = None) -> KVCache:
+                   policy: Policy | None = None) -> KVCache:
         """Build a ring-buffer cache from prefill K/V (B, S, flat).
 
         With ``policy.kv_cache == 'on_write'`` the entries are quantized
         here (K per head_dim group — exact; V along seq — exact at prefill
         because the full sequence is present)."""
+        if policy is not None:
+            policy = resolve_policy(policy, self.name)
         B, S, F = kh_flat.shape
         if (policy is not None and policy.enabled and policy.attn_bmm
                 and policy.input is not None
@@ -418,10 +430,11 @@ class Attention:
         cache: KVCache,
         *,
         position: jnp.ndarray,  # int32 scalar (aligned) or (B,) per-slot
-        policy: QuantPolicy,
+        policy: Policy,
         window=None,
         q: dict | None = None,
     ) -> tuple[jnp.ndarray, KVCache]:
+        pol = resolve_policy(policy, self.name)
         B = x.shape[0]
         position = jnp.asarray(position, jnp.int32)
         aligned = position.ndim == 0  # all rows at the same position
@@ -429,15 +442,15 @@ class Attention:
         pos_b = pos_vec[:, None]  # (B, 1) query positions
         qh, kh, vh = self._project_qkv(params, x, pos_b, policy, q)
         int8_cache = cache.k_scale is not None
-        kv_on_write = (policy.enabled and policy.attn_bmm
-                       and policy.input is not None
-                       and policy.kv_cache == "on_write")
+        kv_on_write = (pol.enabled and pol.attn_bmm
+                       and pol.input is not None
+                       and pol.kv_cache == "on_write")
         if kv_on_write:
             # quantize ONCE at write time; reads skip the re-QDQ (exact for
             # K's head_dim groups; per-token for V — documented deviation)
-            kh = qdq_activation(kh, policy.input, axis=-1,
+            kh = qdq_activation(kh, pol.input, axis=-1,
                                 site=self.name + "/bmm_k")
-            vh = qdq_activation(vh, policy.input, axis=-1,
+            vh = qdq_activation(vh, pol.input, axis=-1,
                                 site=self.name + "/bmm_v")
         size = cache.k.shape[1]
         new_ks = new_vs = None

@@ -7,7 +7,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import QuantPolicy
+from repro.core.policy import Policy
 from repro.dist import sharding as shd
 from repro.nn.linear import Dense
 
@@ -58,7 +58,7 @@ class MLP:
         return p
 
     def apply(
-        self, params: dict, x: jnp.ndarray, policy: QuantPolicy,
+        self, params: dict, x: jnp.ndarray, policy: Policy,
         q: dict | None = None,
     ) -> jnp.ndarray:
         getq = (lambda k: None) if q is None else q.get

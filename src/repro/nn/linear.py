@@ -17,7 +17,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import QuantPolicy
+from repro.core.policy import Policy
 from repro.core.simulate import qmatmul
 from repro.dist import sharding as shd
 from repro.nn.module import Box, truncated_normal
@@ -54,11 +54,14 @@ class Dense:
         self,
         params: dict,
         x: jnp.ndarray,
-        policy: QuantPolicy,
+        policy: Policy,
         *,
         q: dict | None = None,
     ) -> jnp.ndarray:
-        """q: optional quant-state slice {'in_alpha': ...} for static scales."""
+        """q: optional quant-state slice {'in_alpha': ...} for static scales.
+
+        ``policy`` may be a site-addressed PolicyMap — qmatmul resolves it
+        against this layer's site address (``self.name``)."""
         kernel = params["kernel"]
         if type(kernel).__name__ == "CompressedKernel":
             # compressed storage (serving): int codes + bf16 group scales,
@@ -116,7 +119,7 @@ class Embed:
         return shd.constrain(y, ("batch", "seq_res", "embed"))
 
     def attend(
-        self, params: dict, x: jnp.ndarray, policy: QuantPolicy
+        self, params: dict, x: jnp.ndarray, policy: Policy
     ) -> jnp.ndarray:
         """Tied-readout logits: x @ table.T (quantized like any linear)."""
         table = params["table"]

@@ -18,7 +18,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import QuantPolicy
+from repro.core.policy import Policy, resolve_policy
 from repro.core.simulate import qdq_activation, qdq_weight
 from repro.dist import sharding as shd
 from repro.nn.ffn import _ACTS, GATED
@@ -76,10 +76,15 @@ class MoE:
         return max(c, 4)
 
     def apply(
-        self, params: dict, x: jnp.ndarray, policy: QuantPolicy,
+        self, params: dict, x: jnp.ndarray, policy: Policy,
         q: dict | None = None,
     ) -> tuple[jnp.ndarray, dict]:
-        """Returns (output, metrics) — metrics carries the aux load loss."""
+        """Returns (output, metrics) — metrics carries the aux load loss.
+
+        The expert matmuls share one site address (``self.name``): a
+        PolicyMap resolves here once for the whole expert block.
+        """
+        policy = resolve_policy(policy, self.name)
         B, S, D = x.shape
         E, K = self.n_experts, self.top_k
         T = min(self.group_tokens, B * S)

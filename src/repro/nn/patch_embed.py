@@ -15,7 +15,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from repro.core.policy import QuantPolicy
+from repro.core.policy import Policy
 from repro.dist import sharding as shd
 from repro.nn.linear import Dense
 
@@ -71,7 +71,7 @@ class PatchEmbed:
         self,
         params: dict,
         images: jnp.ndarray,
-        policy: QuantPolicy,
+        policy: Policy,
         *,
         q: dict | None = None,
     ) -> jnp.ndarray:

@@ -17,7 +17,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import QuantPolicy
+from repro.core.policy import Policy
 from repro.dist import sharding as shd
 from repro.nn.linear import Dense
 from repro.nn.module import Box
@@ -201,7 +201,7 @@ class Mamba2:
 
     # ------------------------------------------------------------- forward
     def apply(
-        self, params: dict, x: jnp.ndarray, policy: QuantPolicy,
+        self, params: dict, x: jnp.ndarray, policy: Policy,
         q: dict | None = None, return_cache: bool = False,
     ) -> jnp.ndarray:
         B, S, _ = x.shape
@@ -253,7 +253,7 @@ class Mamba2:
 
     def decode_step(
         self, params: dict, x: jnp.ndarray, cache: SSMCache, *,
-        policy: QuantPolicy, q: dict | None = None,
+        policy: Policy, q: dict | None = None,
     ) -> tuple[jnp.ndarray, SSMCache]:
         """x: (B, 1, d_model) -> (y (B,1,d_model), cache')."""
         B = x.shape[0]

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import QuantPolicy
+from repro.core.policy import Policy, QuantPolicy, kv_cache_mode
 from repro.models.lm import DecodeState
 
 
@@ -56,11 +56,13 @@ class ServeEngine:
         *,
         n_slots: int = 4,
         max_len: int = 512,
-        policy: QuantPolicy = QuantPolicy(),
+        policy: Policy = QuantPolicy(),
         prefill_bucket: int = 64,
     ):
         self.model = model
         self.params = params
+        kv_cache_mode(policy)  # engine-global cache storage: fail fast on
+        # maps whose rules disagree on kv_cache
         self.policy = policy
         self.n_slots = n_slots
         self.max_len = max_len

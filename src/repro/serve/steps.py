@@ -7,10 +7,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import QuantPolicy
+from repro.core.policy import Policy, QuantPolicy
 
 
-def make_prefill_step(model, policy: QuantPolicy = QuantPolicy(),
+def make_prefill_step(model, policy: Policy = QuantPolicy(),
                       max_len: int | None = None) -> Callable:
     def prefill_step(params, batch):
         logits, state = model.prefill(params, batch, policy, max_len=max_len)
@@ -19,7 +19,7 @@ def make_prefill_step(model, policy: QuantPolicy = QuantPolicy(),
     return prefill_step
 
 
-def make_decode_step(model, policy: QuantPolicy = QuantPolicy()) -> Callable:
+def make_decode_step(model, policy: Policy = QuantPolicy()) -> Callable:
     def decode_step(params, token, state):
         logits, state = model.decode_step(params, token, state, policy)
         return logits, state

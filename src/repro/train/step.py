@@ -13,7 +13,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import QuantPolicy
+from repro.core.policy import Policy, QuantPolicy
 from repro.optim.adamw import AdamW, AdamWState, apply_updates
 from repro.optim.clip import clip_by_global_norm
 
@@ -27,7 +27,7 @@ class TrainStepConfig:
 def make_train_step(
     model,
     optimizer: AdamW,
-    policy: QuantPolicy = QuantPolicy(),
+    policy: Policy = QuantPolicy(),
     cfg: TrainStepConfig = TrainStepConfig(),
 ) -> Callable:
     def loss_fn(params, batch):

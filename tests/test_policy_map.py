@@ -1,0 +1,449 @@
+"""Site-addressed PolicyMap: rule precedence, hashability/jit closure,
+serialization round-trip, compat-shim equivalence, mixed presets."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import (
+    NONE,
+    PolicyMap,
+    PolicyRule,
+    QuantPolicy,
+    TensorQuant,
+    as_policy_map,
+    check_scan_compatible,
+    endcap_map,
+    has_layer_rules,
+    has_site_rules,
+    kv_cache_mode,
+    map_policies,
+    policy_from_dict,
+    policy_to_dict,
+    preset,
+    resolve_policy,
+)
+from repro.models import build_model
+from repro.models import quant_transforms as qt
+from repro.nn.module import unbox
+
+W4 = preset("w4a4_abfp")
+W8 = preset("w8a8_abfp")
+
+
+# ---------------------------------------------------------------- resolution
+def test_first_match_wins_and_default_fallback():
+    pm = PolicyMap(
+        name="t",
+        rules=(
+            PolicyRule("blocks.0/*", W8),
+            PolicyRule("blocks.*/attn/*", W4),  # never hit for blocks.0
+        ),
+        default=NONE,
+    )
+    assert pm.resolve("blocks.0/attn/q") is W8  # earlier rule wins
+    assert pm.resolve("blocks.3/attn/q") is W4
+    assert pm.resolve("blocks.3/ffn/wi") is NONE  # default fallback
+    assert pm.resolve("embed/attend") is NONE
+
+
+def test_regex_rules():
+    pm = PolicyMap(rules=(PolicyRule(r"re:blocks\.[02]/ffn/.*", W8),),
+                   default=W4)
+    assert pm.resolve("blocks.0/ffn/wi") is W8
+    assert pm.resolve("blocks.2/ffn/wo") is W8
+    assert pm.resolve("blocks.1/ffn/wi") is W4
+    assert pm.resolve("blocks.20/ffn/wi") is W4  # fullmatch, not prefix
+
+
+def test_tuple_rules_coerced():
+    pm = PolicyMap(rules=(("blocks.1/*", W8),), default=W4)
+    assert isinstance(pm.rules[0], PolicyRule)
+    assert pm.resolve("blocks.1/attn/o") is W8
+
+
+def test_resolve_policy_flat_passthrough():
+    assert resolve_policy(W4, "anything") is W4
+    assert resolve_policy(as_policy_map(W4), "anything") == W4
+
+
+def test_helpers():
+    pm = endcap_map(W4, W8, n_layers=4)
+    assert has_site_rules(pm) and has_layer_rules(pm)
+    assert not has_site_rules(W4)
+    attn_only = PolicyMap(rules=(("*attn*", W8),), default=W4)
+    assert has_site_rules(attn_only) and not has_layer_rules(attn_only)
+    # scan-compat guard: layer-indexed rules + scan => error
+    check_scan_compatible(attn_only, scan_layers=True)  # ok
+    check_scan_compatible(pm, scan_layers=False)  # ok
+    with pytest.raises(ValueError, match="scan_layers"):
+        check_scan_compatible(pm, scan_layers=True)
+
+
+def test_kv_cache_mode_uniform_and_mixed():
+    pm = endcap_map(W4, W8, n_layers=4)
+    assert kv_cache_mode(pm) == "requant"
+    pm2 = pm.replace_all(kv_cache="int8")
+    assert kv_cache_mode(pm2) == "int8"
+    mixed = PolicyMap(
+        rules=(("blocks.0/*", W8.replace(kv_cache="int8")),), default=W4)
+    with pytest.raises(ValueError, match="kv_cache"):
+        kv_cache_mode(mixed)
+    # fp32 rules count too: their sites get fp cache storage, which is
+    # heterogeneous with int8 storage elsewhere
+    fp32_mix = PolicyMap(rules=(("blocks.0/*", NONE),),
+                         default=W8.replace(kv_cache="int8"))
+    with pytest.raises(ValueError, match="kv_cache"):
+        kv_cache_mode(fp32_mix)
+    # ... and with_kv_cache is the remedy: sets the mode on EVERY entry
+    # (fp32 head rule + int8 KV is a legitimate combination)
+    from repro.core.policy import with_kv_cache
+
+    head_fp32 = PolicyMap(rules=(("embed/attend", NONE),), default=W8)
+    fixed = with_kv_cache(head_fp32, "int8")
+    assert kv_cache_mode(fixed) == "int8"
+    assert fixed.resolve("embed/attend").kv_cache == "int8"
+
+
+def test_kv_heterogeneous_map_fails_fast_in_prefill(opt_setup):
+    """Regression: prefill raises the clear kv_cache error, not a pytree
+    stack mismatch, when a map's rules disagree on cache storage."""
+    cfg, model, params, batch = opt_setup
+    bad = PolicyMap(
+        rules=(("blocks.0/*", W8.replace(kv_cache="int8")),), default=W4)
+    with pytest.raises(ValueError, match="kv_cache"):
+        model.prefill(params, batch, policy=bad, max_len=32)
+
+
+def test_replace_enabled_flat_and_map():
+    from repro.core.policy import replace_enabled
+
+    flat = replace_enabled(W4, kv_cache="int8")
+    assert flat.kv_cache == "int8"
+    pm = PolicyMap(rules=(("blocks.0/*", W8),), default=NONE)
+    out = replace_enabled(pm, kv_cache="int8")
+    assert out.rules[0].policy.kv_cache == "int8"
+    assert out.default is NONE  # disabled rules untouched
+
+
+def test_map_policies_and_with_ste():
+    pm = endcap_map(W4, W8, n_layers=4)
+    qat = pm.with_ste(True)
+    assert qat.name.endswith("_qat")
+    assert qat.resolve("blocks.0/attn/q").input.ste
+    assert qat.resolve("blocks.2/ffn/wi").weight.ste
+    flat = map_policies(W4, lambda p: p.replace(compute="int8"))
+    assert isinstance(flat, QuantPolicy) and flat.compute == "int8"
+
+
+# ------------------------------------------------------- hashing / jit cache
+def test_hashable_and_equality_stable():
+    a = endcap_map(W4, W8, n_layers=6)
+    b = endcap_map(W4, W8, n_layers=6)
+    assert a == b and hash(a) == hash(b)
+    assert a != endcap_map(W4, W8, n_layers=5)
+    {a: 1}  # usable as dict key
+
+
+def test_jit_closure_no_retrace():
+    """Two equal maps must hit the same jit cache entry."""
+    x = jnp.ones((4, 8))
+    traces = []
+
+    def g(pm):
+        def fn(x):
+            traces.append(1)
+            pol = pm.resolve("blocks.0/attn/q")
+            return x * (2.0 if pol.enabled else 1.0)
+        return fn
+
+    jf = jax.jit(g(endcap_map(W4, W8, n_layers=4)))
+    jf(x)
+    n0 = len(traces)
+    jf(x)
+    assert len(traces) == n0  # no retrace on the second call
+
+
+# ------------------------------------------------------------- serialization
+def test_dict_round_trip_flat_and_map():
+    for pol in (W4, preset("w4a8_mse"), NONE):
+        assert policy_from_dict(policy_to_dict(pol)) == pol
+    pm = endcap_map(W4, W8, n_layers=4)
+    d = policy_to_dict(pm)
+    assert d["kind"] == "map" and len(d["rules"]) == 2
+    import json
+
+    json.dumps(d)  # JSON-safe
+    assert policy_from_dict(d) == pm
+    mixed = preset("w4ffn_fp8attn")
+    assert policy_from_dict(policy_to_dict(mixed)) == mixed
+
+
+# --------------------------------------------------------------- presets
+def test_preset_qat_unknown_base_error():
+    with pytest.raises(ValueError, match="QAT preset"):
+        preset("nonsense_qat")
+
+
+def test_preset_unknown_error_lists_mixed():
+    with pytest.raises(ValueError, match="mixed"):
+        preset("definitely_not_a_policy")
+
+
+def test_endcap_preset_requires_n_layers():
+    with pytest.raises(ValueError, match="n_layers"):
+        preset("w4a4_abfp+w8a8_ends")
+    pm = preset("w4a4_abfp+w8a8_ends", n_layers=3)
+    assert pm.resolve("blocks.0/ffn/wi").weight.fmt.bits == 8
+    assert pm.resolve("blocks.1/ffn/wi").weight.fmt.bits == 4
+    assert pm.resolve("blocks.2/ffn/wi").weight.fmt.bits == 8
+
+
+def test_mixed_preset_resolves_and_jits_on_cpu():
+    """Fast-suite smoke: a mixed preset closes over a jitted OPT forward."""
+    cfg = get_config("opt-tiny").replace(
+        n_layers=2, d_model=32, n_heads=2, n_kv=2, head_dim=16, d_ff=64,
+        vocab=97)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    tokens = {"tokens": np.arange(16, dtype=np.int32).reshape(2, 8)}
+    pm = preset("w4a4_abfp+w8a8_ends", n_layers=cfg.n_layers)
+    f = jax.jit(lambda p, b: model.apply(p, b, pm)[0])
+    out = f(params, tokens)
+    assert np.isfinite(np.asarray(out)).all()
+    # format-mixing preset too
+    f2 = jax.jit(lambda p, b: model.apply(p, b, preset("w4ffn_fp8attn"))[0])
+    assert np.isfinite(np.asarray(f2(params, tokens))).all()
+
+
+# ------------------------------------------------------ model equivalence
+@pytest.fixture(scope="module")
+def opt_setup():
+    cfg = get_config("opt-tiny").replace(
+        n_layers=3, d_model=48, n_heads=4, n_kv=4, head_dim=12, d_ff=96,
+        vocab=131)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(1)))
+    rng = np.random.RandomState(3)
+    batch = {"tokens": rng.randint(0, 131, (2, 16)).astype(np.int32)}
+    return cfg, model, params, batch
+
+
+def test_compat_shim_matches_flat_policy(opt_setup):
+    """Single-rule map == old flat policy on an OPT forward (bit-exact)."""
+    cfg, model, params, batch = opt_setup
+    for name in ("w4a4_abfp", "w4a8_mse", "fp32"):
+        flat = preset(name)
+        shim = as_policy_map(flat)
+        ref, _ = model.apply(params, batch, flat)
+        got, _ = model.apply(params, batch, shim)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_uniform_rule_map_matches_flat(opt_setup):
+    """A map whose every rule is the same policy == the flat policy."""
+    cfg, model, params, batch = opt_setup
+    flat = preset("w4a4_abfp")
+    pm = PolicyMap(name="uniform", rules=(("blocks.*", flat),), default=flat)
+    ref, _ = model.apply(params, batch, flat)
+    got, _ = model.apply(params, batch, pm)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_per_layer_rules_change_the_computation(opt_setup):
+    cfg, model, params, batch = opt_setup
+    flat = preset("w4a4_abfp")
+    ends = endcap_map(flat, preset("w8a8_abfp"), cfg.n_layers)
+    a, _ = model.apply(params, batch, flat)
+    b, _ = model.apply(params, batch, ends)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+    # and the endcap map is closer to fp32 than uniform W4A4 on raw MSE
+    ref, _ = model.apply(params, batch, preset("fp32"))
+    e_flat = float(np.mean((np.asarray(a) - np.asarray(ref)) ** 2))
+    e_ends = float(np.mean((np.asarray(b) - np.asarray(ref)) ** 2))
+    assert e_ends <= e_flat * 1.05
+
+
+def test_remat_unrolled_preserves_layer_sites(opt_setup):
+    """Regression: remat'd unrolled blocks must keep blocks.{i} names so
+    layer-indexed rules resolve identically with and without remat."""
+    cfg, model, params, batch = opt_setup
+    from repro.models import build_model as bm
+
+    ends = endcap_map(preset("w4a4_abfp"), preset("w8a8_abfp"), cfg.n_layers)
+    a, _ = model.apply(params, batch, ends)
+    model_r = bm(cfg.replace(remat="full"))
+    b, _ = model_r.apply(params, batch, ends)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+    # and it is NOT the interior-everywhere result
+    flat, _ = model_r.apply(params, batch, preset("w4a4_abfp"))
+    assert not np.allclose(np.asarray(b), np.asarray(flat))
+
+
+def test_regex_layer_rules_hit_the_scan_guard():
+    """Regression: 're:blocks\\.0/...' and 're:blocks[.]0/...' count as
+    layer-indexed too."""
+    for pat in (r"re:blocks\.0/.*", "re:blocks[.]0/.*", "blocks*"):
+        pm = PolicyMap(rules=(PolicyRule(pat, W8),), default=W4)
+        assert has_layer_rules(pm), pat
+        with pytest.raises(ValueError, match="scan_layers"):
+            check_scan_compatible(pm, scan_layers=True)
+    # 'block/...' patterns target the scan-mode site names: never flagged
+    assert not has_layer_rules(
+        PolicyMap(rules=(("block/attn*", W8),), default=W4))
+
+
+def test_layer_rules_rejected_by_families_without_layer_sites():
+    from repro.core.policy import reject_layer_rules
+
+    pm = endcap_map(W4, W8, n_layers=4)
+    with pytest.raises(NotImplementedError, match="per-layer site"):
+        reject_layer_rules(pm, "EncDecLM")
+    reject_layer_rules(PolicyMap(rules=(("*attn*", W8),), default=W4))  # ok
+    reject_layer_rules(W4)  # flat always ok
+
+
+def test_prequant_rejects_fp32_rule_map(opt_setup):
+    """Regression: an fp32 rule means that site's kernel must NOT be
+    prequantized — weight-uniformity check counts disabled rules."""
+    from repro.models.serving_transforms import prequantize_weights
+
+    cfg, model, params, batch = opt_setup
+    pm = PolicyMap(rules=(("embed/attend", NONE),),
+                   default=preset("w4a4_abfp"))
+    with pytest.raises(NotImplementedError, match="weight-uniform"):
+        prequantize_weights(params, pm)
+
+
+def test_fp32_rule_disables_site(opt_setup):
+    """An fp32 rule for one projection leaves that matmul unquantized."""
+    cfg, model, params, batch = opt_setup
+    flat = preset("w4a4_abfp")
+    pm = PolicyMap(name="skip_head", rules=(("embed/attend", NONE),),
+                   default=flat)
+    a, _ = model.apply(params, batch, flat)
+    b, _ = model.apply(params, batch, pm)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------- calibration integration
+def test_site_address_contract():
+    sa = qt.site_address
+    assert sa("blocks.0/attn/q/in") == "blocks.0/attn/q"
+    assert sa("blocks.11/ffn/wi/in") == "blocks.11/ffn/wi"
+    assert sa("blocks.2/attn/bmm_q") == "blocks.2/attn"
+    assert sa("blocks.2/attn/probs") == "blocks.2/attn"
+    assert sa("embed/attend/in") == "embed/attend"
+    assert sa("blocks.1/mamba/in_proj/in") == "blocks.1/mamba/in_proj"
+
+
+def test_build_qtree_reports_dropped_sites(opt_setup):
+    cfg, model, params, batch = opt_setup
+    calib = qt.calibrate(model, params, [batch], preset("w4a8_mse"))
+    tree, dropped = qt.static_qtree(calib, preset("w4a8_mse"), cfg.n_layers,
+                                    method="max", return_report=True)
+    assert "embed/attend/in" in dropped  # outside the block tree
+    assert all(not s.startswith("blocks.") for s in dropped)
+    # default path unchanged: returns the tree only
+    from repro.core.formats import INT8
+
+    tree2 = qt.static_qtree(calib, INT8, cfg.n_layers, method="max")
+    assert set(tree2) == {"blocks"}
+
+
+def test_per_site_alpha_solving_uses_resolved_format(opt_setup):
+    """Endcap INT8 sites must solve (weakly) larger MSE alphas than the
+    same sites solved against INT4 — more codes => less clipping pays."""
+    cfg, model, params, batch = opt_setup
+    calib = qt.calibrate(model, params, [batch], preset("w4a8_mse"))
+    ends = PolicyMap(
+        name="mse_ends",
+        rules=(("blocks.0/*", preset("w8a8_mse")),),
+        default=preset("w4a4_mse"),
+    )
+    a_mixed = qt.solve_alphas_for_policy(calib, ends, method="mse")
+    from repro.core.formats import INT4
+
+    a_int4 = qt.solve_alphas(calib, INT4, method="mse")
+    site = "blocks.0/attn/q/in"
+    assert float(a_mixed[site]) >= float(a_int4[site]) - 1e-6
+    # interior solves identical to the uniform INT4 solve
+    site_in = "blocks.1/attn/q/in"
+    np.testing.assert_allclose(float(a_mixed[site_in]),
+                               float(a_int4[site_in]), rtol=1e-6)
+
+
+# ------------------------------------------------------------- bits report
+def test_policy_bits_report_consistent_with_map():
+    from repro.launch import roofline as rf
+
+    cfg = get_config("opt-tiny")
+    L = cfg.n_layers
+    pm = preset("w4a4_abfp+w8a8_ends", n_layers=L)
+    rep = rf.policy_bits_report(cfg, pm)
+    for s in rep["sites"]:
+        want = 8 if s["site"].startswith(
+            ("blocks.0/", f"blocks.{L - 1}/")) else 4
+        assert s["w_bits"] == want, s
+    u8 = rf.policy_bits_report(cfg, preset("w8a8_abfp"))
+    u4 = rf.policy_bits_report(cfg, preset("w4a4_abfp"))
+    assert u4["total_weight_bits"] < rep["total_weight_bits"] \
+        < u8["total_weight_bits"]
+    assert u8["total_weight_params"] == rep["total_weight_params"]
+
+
+def test_bits_report_hybrid_encdec_use_family_site_names():
+    """Regression: hybrid/encdec enumerate their real family-level site
+    names, so the recommended 'mamba*'/'*attn*' rule patterns resolve in
+    the bits report exactly as they do at runtime."""
+    from repro.launch import roofline as rf
+
+    hybrid = get_config("zamba2-7b")
+    pm = PolicyMap(rules=(("mamba*", W4),), default=W8)
+    rep = rf.policy_bits_report(hybrid, pm)
+    names = {s["site"] for s in rep["sites"]}
+    assert {"mamba/in_proj", "mamba/out_proj", "shared/q",
+            "mlp/wi", "embed/attend"} <= names
+    by_site = {s["site"]: s for s in rep["sites"]}
+    assert by_site["mamba/in_proj"]["w_bits"] == 4
+    assert by_site["shared/q"]["w_bits"] == 8
+    # analytic param count tracks the config's own accounting (both are
+    # matmul-weight approximations: n_params() counts conv/norm/lora but
+    # uses d not 2d for the shared qkv — within a few percent)
+    assert abs(rep["total_weight_params"] - hybrid.n_params()) \
+        < 0.05 * hybrid.n_params()
+
+    encdec = get_config("whisper-large-v3")
+    rep2 = rf.policy_bits_report(
+        encdec, PolicyMap(rules=(("cross/*", W4),), default=W8))
+    by_site2 = {s["site"]: s for s in rep2["sites"]}
+    assert by_site2["cross/k"]["w_bits"] == 4
+    assert by_site2["attn/q"]["w_bits"] == 8
+
+
+def test_serving_policy_map_drops_weights():
+    from repro.models.serving_transforms import serving_policy
+
+    pm = preset("w4a4_abfp+w8a8_ends", n_layers=4)
+    served = serving_policy(pm)
+    assert served.name.endswith("_served")
+    assert all(p.weight is None for p in served.policies)
+    assert served.resolve("blocks.1/ffn/wi").input is not None
+
+
+def test_compress_rejects_weight_heterogeneous_map():
+    from repro.models.serving_transforms import _uniform_weight_quant
+
+    pm = preset("w4a4_abfp+w8a8_ends", n_layers=4)
+    with pytest.raises(NotImplementedError, match="weight-uniform"):
+        _uniform_weight_quant(pm)
+    # weight-uniform map (differing only in activations) passes
+    a8 = QuantPolicy(name="a8", input=TensorQuant("int8"),
+                     weight=TensorQuant("int4"))
+    a4 = QuantPolicy(name="a4", input=TensorQuant("int4"),
+                     weight=TensorQuant("int4"))
+    ok = PolicyMap(rules=(("blocks.0/*", a8),), default=a4)
+    assert _uniform_weight_quant(ok) == TensorQuant("int4")
