@@ -307,14 +307,19 @@ def eval_top1(model, params, policy: Policy, q=None,
 _vit_calib_cache = {}
 
 
+def vit_calib_batches(model, *, n_batches: int = 4, batch: int = 16):
+    """Deterministic image calibration batches (ViT recipe/calib input)."""
+    xtr, ytr, _, _ = image_data(model.cfg)
+    loader = ImageLoader(xtr, ytr, global_batch=batch, seed=77)
+    return [loader.batch_at(i) for i in range(n_batches)]
+
+
 def calibrated_vit(name, model, params, *, n_batches: int = 4,
                    batch: int = 16):
     """Calibration pass over training images (cached per model identity)."""
     key = (name, id(params))
     if key not in _vit_calib_cache:
-        xtr, ytr, _, _ = image_data(model.cfg)
-        loader = ImageLoader(xtr, ytr, global_batch=batch, seed=77)
-        batches = [loader.batch_at(i) for i in range(n_batches)]
+        batches = vit_calib_batches(model, n_batches=n_batches, batch=batch)
         _vit_calib_cache[key] = qt.calibrate(
             model, params, batches, preset("w4a8_mse")
         )
@@ -325,19 +330,52 @@ def calibrated_vit(name, model, params, *, n_batches: int = 4,
 _calib_cache = {}
 
 
+def calib_batches(model, *, n_batches: int = 4, batch: int = 4):
+    """The deterministic calibration batches every benchmark shares."""
+    stream, _ = split(corpus())
+    loader = LMLoader(stream, seq_len=SEQ, global_batch=batch, seed=77)
+    return [adapt_batch(model.cfg, loader.batch_at(i), 80_000 + i)
+            for i in range(n_batches)]
+
+
 def calibrated(name, model, params, *, outer=False, n_batches: int = 4,
                batch: int = 4):
     """Calibration pass (cached in-process per model identity)."""
     key = (name, outer, id(params))
     if key not in _calib_cache:
-        stream, _ = split(corpus())
-        loader = LMLoader(stream, seq_len=SEQ, global_batch=batch, seed=77)
-        batches = [adapt_batch(model.cfg, loader.batch_at(i), 80_000 + i)
-                   for i in range(n_batches)]
+        batches = calib_batches(model, n_batches=n_batches, batch=batch)
         _calib_cache[key] = qt.calibrate(
             model, params, batches, preset("w4a8_mse"), collect_outer=outer
         )
     return _calib_cache[key]
+
+
+# ---------------------------------------------------------------- recipes
+_recipe_cache = {}
+
+
+def run_recipe(name, model, params, recipe, policy=None, *, calib=None,
+               batches=None):
+    """Apply a QuantRecipe to a proxy (cached per model identity).
+
+    Observation passes use the benchmarks' calibration convention
+    (``preset('w4a8_mse')``, same as ``calibrated``) so recipe-applied
+    results are directly comparable with the legacy driver rows.  A cached
+    ``calib`` from ``calibrated()`` short-circuits the first collection;
+    the engine re-collects automatically once a pass mutates params.
+    """
+    from repro.core import recipe as rc
+
+    rec = rc.as_recipe(recipe)
+    pol_key = getattr(policy, "name", None) or rec.policy_preset
+    key = (name, rec.name, pol_key, id(params))
+    if key not in _recipe_cache:
+        _recipe_cache[key] = rc.apply_recipe(
+            rec, model, params,
+            batches if batches is not None else calib_batches(model),
+            policy, calib=calib, calib_policy=preset("w4a8_mse"),
+        )
+    return _recipe_cache[key]
 
 
 # ------------------------------------------------------------------ output

@@ -4,8 +4,11 @@
 
 1. trains a small OPT-family LM on the synthetic corpus (cached),
 2. calibrates activations (per-site stats + Hessians),
-3. applies every PTQ method from the paper:
+3. applies every PTQ method from the paper as a **QuantRecipe** pipeline:
      static MSE | ABFP | ABFP-SmoothQuant | GPTQ | RPTQ | ABFP-QAT
+   plus the method COMPOSITES the recipe engine exists for
+   (smoothquant+gptq with automatic re-calibration between passes, and the
+   site-scoped FP8-attention / INT4-FFN pipeline),
 4. prints the eval-PPL table (compare to paper Tables I/III/V/VIII).
 """
 
@@ -17,9 +20,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks
 import argparse
 
 from benchmarks import common as C
-from repro.core.formats import INT4, INT8
 from repro.core.policy import preset
-from repro.models import quant_transforms as qt
+from repro.core.recipe import get_recipe
 
 
 def main():
@@ -36,18 +38,25 @@ def main():
     print("calibrating (4 batches, activation stats + Hessians)...")
     calib = C.calibrated(args.model, model, params, outer=True)
 
+    def recipe_row(recipe_name, policy, eval_policy=None):
+        """Apply a recipe; eval under ``eval_policy`` (default: policy)."""
+        res = C.run_recipe(args.model, model, params, recipe_name, policy,
+                           calib=calib)
+        ppl = C.eval_ppl(model, res.params, eval_policy or policy,
+                         q=res.qtree)
+        return res, ppl
+
     rows = [("fp32 baseline", C.eval_ppl(model, params, preset("fp32")))]
 
     # --- static MSE calibration (Table I/IV) ----------------------------
-    q, dropped = qt.static_qtree(calib, INT8, cfg.n_layers, method="mse",
-                                 return_report=True)
-    if dropped:
+    res, ppl = recipe_row("static_mse", preset("w4a8_mse"))
+    if res.dropped_sites:
         # sites outside the block tree (e.g. the tied LM head readout
         # 'embed/attend/in') fall back to dynamic-max at eval
-        print(f"  note: {len(dropped)} calibration site(s) not in the "
-              f"static q-tree (dynamic-max fallback): {', '.join(dropped)}")
-    rows.append(("W4A8 static-MSE",
-                 C.eval_ppl(model, params, preset("w4a8_mse"), q=q)))
+        print(f"  note: {len(res.dropped_sites)} calibration site(s) not in "
+              f"the static q-tree (dynamic-max fallback): "
+              f"{', '.join(res.dropped_sites)}")
+    rows.append(("W4A8 static-MSE", ppl))
 
     # --- ABFP (the paper's workhorse) ------------------------------------
     rows.append(("W4A8 ABFP n=64",
@@ -56,19 +65,36 @@ def main():
                  C.eval_ppl(model, params, preset("w4a4_abfp"))))
 
     # --- SmoothQuant folding ---------------------------------------------
-    sq_params = qt.apply_smoothquant(params, calib)
-    rows.append(("W4A8 ABFP-SQ",
-                 C.eval_ppl(model, sq_params, preset("w4a8_abfp"))))
+    _, ppl = recipe_row("smoothquant", preset("w4a8_mse"),
+                        eval_policy=preset("w4a8_abfp"))
+    rows.append(("W4A8 ABFP-SQ", ppl))
 
     # --- GPTQ (weights only, fp activations) ------------------------------
-    gq_params, infos = qt.apply_gptq(params, calib, INT4)
-    rows.append(("W4A16 GPTQ",
-                 C.eval_ppl(model, gq_params, preset("fp32"))))
+    _, ppl = recipe_row("gptq", preset("w4a8_mse"),
+                        eval_policy=preset("fp32"))
+    rows.append(("W4A16 GPTQ", ppl))
 
     # --- RPTQ (channel-cluster static scales) ------------------------------
-    q_rptq, _ = qt.rptq_qtree(calib, cfg.n_layers)
-    rows.append(("W4A8 RPTQ",
-                 C.eval_ppl(model, params, preset("w4a8_mse"), q=q_rptq)))
+    _, ppl = recipe_row("rptq_w4a8", preset("w4a8_mse"))
+    rows.append(("W4A8 RPTQ", ppl))
+
+    # --- method COMPOSITES (the QuantRecipe headline) ----------------------
+    # smoothquant+gptq: the engine re-calibrates between the passes, so
+    # GPTQ's Hessians always reflect the smoothed weights (no stale stats)
+    res, ppl = recipe_row(
+        "smoothquant+gptq+static_mse", preset("w4a8_mse"),
+        # GPTQ pre-quantized the kernels: runtime weight QDQ off
+        eval_policy=preset("w4a8_mse").replace(weight=None))
+    rows.append(("W4A8 SQ+GPTQ (recipe)", ppl))
+    print(f"  smoothquant+gptq: {res.n_calibrations} automatic "
+          "re-calibration(s) between passes")
+
+    # site-scoped composite: FP8-E4M3 attention takes static-MSE only,
+    # INT4/8 FFNs take SmoothQuant+GPTQ — one pipeline, PolicyMap scoping
+    rec = get_recipe("fp8attn_mse+int4ffn_sqgptq")
+    mixed_pol = preset(rec.policy_preset, n_layers=cfg.n_layers)
+    res, ppl = recipe_row(rec.name, mixed_pol)
+    rows.append(("FP8attn-MSE + INT4ffn-SQ+GPTQ", ppl))
 
     # --- site-addressed mixed precision (PolicyMap) -------------------------
     # W8A8 endcap blocks, W4A4 interior: the layer-sensitivity assignment
@@ -83,9 +109,9 @@ def main():
     rows.append(("W4A4 ABFP-QAT",
                  C.eval_ppl(model, qat_params, preset("w4a4_abfp"))))
 
-    print(f"\n{'method':22} {'eval PPL':>10}")
+    print(f"\n{'method':30} {'eval PPL':>10}")
     for name, ppl in rows:
-        print(f"{name:22} {ppl:10.2f}")
+        print(f"{name:30} {ppl:10.2f}")
 
 
 if __name__ == "__main__":

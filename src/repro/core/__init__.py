@@ -14,9 +14,25 @@ from repro.core.policy import (
     preset,
     resolve_policy,
 )
+from repro.core.recipe import (
+    PassSpec,
+    QuantRecipe,
+    RecipeEngine,
+    RecipeError,
+    apply_recipe,
+    as_recipe,
+    get_recipe,
+    recipe_from_dict,
+    recipe_names,
+    recipe_to_dict,
+    register_recipe,
+)
 
 __all__ = [
     "formats", "get_format", "Policy", "PolicyMap", "PolicyRule",
     "QuantPolicy", "TensorQuant", "as_policy_map", "policy_from_dict",
     "policy_to_dict", "preset", "resolve_policy",
+    "PassSpec", "QuantRecipe", "RecipeEngine", "RecipeError",
+    "apply_recipe", "as_recipe", "get_recipe", "recipe_from_dict",
+    "recipe_names", "recipe_to_dict", "register_recipe",
 ]

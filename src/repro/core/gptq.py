@@ -15,7 +15,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.formats import Format, IntFormat
+from repro.core.formats import FloatFormat, Format, IntFormat
 
 
 @dataclasses.dataclass
@@ -26,16 +26,35 @@ class GPTQConfig:
     actorder: bool = False
 
 
-def _quant_col(row: np.ndarray, alpha: np.ndarray, fmt: Format) -> np.ndarray:
-    """QDQ one input-channel row (N,) against per-channel alphas (N,)."""
-    scale = np.maximum(alpha, 1e-8) / fmt.qmax_pos
+def _float_qdq_np(x: np.ndarray, fmt: FloatFormat) -> np.ndarray:
+    """Host-side minifloat QDQ mirroring ``FloatFormat.qdq_unit``.
+
+    GPTQ is a host-side run-once transform, but the old float path bounced
+    every input-channel row through jnp — one host<->device sync per column,
+    which dominated wall-clock for e2m1/e4m3 weight formats.  This keeps the
+    whole round-trip in numpy (same exponent-extraction + quantum rounding;
+    np.round is round-half-even like jnp.round), so a block's columns cost
+    pure vectorized host math and zero device transfers.
+    """
+    absx = np.abs(x)
+    safe = np.where(absx > 0, absx, 1.0)
+    e = np.floor(np.log2(safe))
+    e = np.clip(e, fmt.min_normal_exp, fmt.max_biased_exp - fmt._bias)
+    quantum = np.ldexp(1.0, (e - fmt.man_bits).astype(np.int32))
+    q = np.round(x / quantum) * quantum
+    q = np.clip(q, -fmt.qmax_pos, fmt.qmax_pos)
+    return np.where(absx == 0, 0.0, q)
+
+
+def _quant_col(row: np.ndarray, scale: np.ndarray, fmt: Format) -> np.ndarray:
+    """QDQ one input-channel row (N,) against per-channel scales (N,)."""
     if isinstance(fmt, IntFormat):
         q = np.clip(np.rint(row / scale), fmt.qmin, fmt.qmax_pos)
         return q * scale
-    # float formats: reuse the jnp unit qdq via numpy round-trip
-    import jax.numpy as jnp
-
-    return np.asarray(fmt.qdq_unit(jnp.asarray(row / scale))) * scale
+    # f32 cast first: the old jnp path quantized the float32 image of the
+    # scaled row (x64 disabled), so this keeps float-format GPTQ outputs
+    # bit-compatible with prior releases
+    return _float_qdq_np((row / scale).astype(np.float32), fmt) * scale
 
 
 def gptq_quantize(
@@ -76,7 +95,7 @@ def gptq_quantize(
 
     group = cfg.group_size if cfg.group_size > 0 else K
     losses = np.zeros_like(w)
-    alpha = None
+    scale = None
     for i1 in range(0, K, cfg.blocksize):
         i2 = min(i1 + cfg.blocksize, K)
         W1 = w[i1:i2, :].copy()
@@ -89,8 +108,9 @@ def gptq_quantize(
                 # refresh per-output-channel scales over the next group rows
                 g2 = min(k + group, K)
                 alpha = np.maximum(np.abs(w[k:g2, :]).max(axis=0), 1e-8)
+                scale = alpha / fmt.qmax_pos
             d = U1[i, i]
-            q = _quant_col(W1[i, :], alpha, fmt)
+            q = _quant_col(W1[i, :], scale, fmt)
             Q1[i, :] = q
             err = (W1[i, :] - q) / d
             losses[k, :] = err**2 / 2.0

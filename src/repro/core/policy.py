@@ -449,6 +449,14 @@ _PRESET_FACTORIES: dict[str, Callable[[int], QuantPolicy]] = {
         weight=TensorQuant("int8", scaler="channel_max"),
         attn_bmm=True,
     ),
+    # --- FP8-E4M3 static calibration (mixed-preset / recipe building
+    #     block: static-MSE clip ranges solved against the E4M3 grid) ---
+    "w8a8_e4m3_mse": lambda n: QuantPolicy(
+        name="w8a8_e4m3_mse",
+        input=TensorQuant("e4m3", scaler="static"),
+        weight=TensorQuant("e4m3", scaler="channel_max"),
+        attn_bmm=True,
+    ),
     # --- weight-only (GPTQ baseline shape, Table V "W4A16") ---
     "w4a16": lambda n: QuantPolicy(
         name="w4a16", input=None, weight=_abfp("int4", n), attn_bmm=False,
@@ -518,6 +526,19 @@ def _w4ffn_fp8attn(n: int, n_layers: int | None) -> PolicyMap:
         name="w4ffn_fp8attn",
         rules=(PolicyRule("*attn*", _PRESET_FACTORIES["w8a8_e4m3"](n)),),
         default=_PRESET_FACTORIES["w4a4_abfp"](n),
+    )
+
+
+@_mixed("w4ffn_fp8attn_mse")
+def _w4ffn_fp8attn_mse(n: int, n_layers: int | None) -> PolicyMap:
+    """Static-calibrated twin of ``w4ffn_fp8attn``: FP8-E4M3 attention with
+    static-MSE clip ranges, INT4-weight/INT8-act static-MSE FFN + rest —
+    the per-site-format eval policy the site-scoped PTQ recipes pair with
+    (each site's alpha grid-searches against *its* resolved grid)."""
+    return PolicyMap(
+        name="w4ffn_fp8attn_mse",
+        rules=(PolicyRule("*attn*", _PRESET_FACTORIES["w8a8_e4m3_mse"](n)),),
+        default=_PRESET_FACTORIES["w4a8_mse"](n),
     )
 
 

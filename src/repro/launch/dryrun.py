@@ -130,7 +130,8 @@ def build_cell(cfg: ArchConfig, shape: ShapeSpec, policy: Policy,
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
-             policy_name: str = "w4a8_abfp", remat: str | None = None,
+             policy_name: str | None = "w4a8_abfp",
+             recipe_name: str | None = None, remat: str | None = None,
              microbatches: int = 1, compute: str | None = None,
              logits_chunk: int | None = None, out_dir: str | None = None,
              strategy: str | None = None, prequant: bool = False,
@@ -138,6 +139,19 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              kv_int8: bool = False, tag: str = "") -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
+    # --recipe tags the compiled cell with the offline PTQ method whose
+    # weights it would serve; the recipe's paired eval policy becomes the
+    # cell's policy unless --policy overrides it explicitly.
+    recipe_dict = None
+    if recipe_name is not None:
+        from repro.core.recipe import get_recipe, recipe_to_dict
+
+        recipe = get_recipe(recipe_name)
+        recipe_dict = recipe_to_dict(recipe)
+        if policy_name is None and recipe.policy_preset:
+            policy_name = recipe.policy_preset
+    if policy_name is None:
+        policy_name = "w4a8_abfp"
     if shape_name in cfg.skip_shapes:
         return {"arch": arch, "shape": shape_name, "status": "skipped",
                 "reason": "inapplicable (see DESIGN.md §5)"}
@@ -182,6 +196,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "policy": policy.name, "remat": cfg.remat,
         "scan_layers": cfg.scan_layers,
         "policy_bits": policy_bits,
+        "recipe": recipe_dict,
         "microbatches": microbatches, "tag": tag,
         "strategy": strategy, "prequant": prequant,
         "compress": compress, "kv_on_write": kv_on_write,
@@ -293,7 +308,13 @@ def main() -> int:
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
-    ap.add_argument("--policy", default="w4a8_abfp")
+    ap.add_argument("--policy", default=None,
+                    help="policy preset (default w4a8_abfp, or the "
+                    "--recipe's paired policy)")
+    ap.add_argument("--recipe", default=None,
+                    help="QuantRecipe name to record in the artifact; its "
+                    "policy_preset becomes the cell policy unless --policy "
+                    "is given")
     ap.add_argument("--remat", default=None)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--compute", default=None, choices=[None, "fp", "int8"])
@@ -324,6 +345,7 @@ def main() -> int:
     for arch, shape in cells:
         rec = run_cell(
             arch, shape, multi_pod=args.multi_pod, policy_name=args.policy,
+            recipe_name=args.recipe,
             remat=args.remat, microbatches=args.microbatches,
             compute=args.compute, logits_chunk=args.logits_chunk,
             strategy=args.strategy, prequant=args.prequant,

@@ -22,7 +22,13 @@ def main() -> int:
     ap.add_argument("--arch", default="qwen2-7b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
-    ap.add_argument("--policy", default="fp32")
+    ap.add_argument("--policy", default=None,
+                    help="policy preset (default fp32, or the --recipe's "
+                    "paired policy)")
+    ap.add_argument("--recipe", default=None,
+                    help="QuantRecipe name applied to the weights before "
+                    "serving (e.g. smoothquant+gptq); calibrates on "
+                    "synthetic prompts")
     ap.add_argument("--n-slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--n-requests", type=int, default=8)
@@ -46,12 +52,53 @@ def main() -> int:
 
     from repro.core.policy import has_layer_rules
 
-    policy = preset(args.policy, n_layers=cfg.n_layers)
+    rec = None
+    if args.recipe:
+        from repro.core.recipe import get_recipe
+
+        rec = get_recipe(args.recipe)
+    # an explicit --policy wins; otherwise the recipe's paired policy
+    policy_name = args.policy or (rec.policy_preset if rec else None) or "fp32"
+    policy = preset(policy_name, n_layers=cfg.n_layers)
     if has_layer_rules(policy):
         # layer-indexed PolicyMap rules need per-layer sites (eager unroll)
         cfg = cfg.replace(scan_layers=False)
+    recipe_info = {}
+    if rec is not None:
+        # calibration observers need eager per-layer execution
+        cfg = cfg.replace(scan_layers=False, remat="none")
     model = build_model(cfg)
     params = unbox(model.init(jax.random.PRNGKey(args.seed)))
+    if rec is not None:
+        import sys
+
+        from repro.core.policy import replace_enabled
+        from repro.core.recipe import apply_recipe, quantizes_weights_offline
+
+        crng = np.random.RandomState(args.seed + 1)
+        batches = [
+            {"tokens": crng.randint(0, cfg.vocab, (2, 32)).astype(np.int32)}
+            for _ in range(2)
+        ]
+        # observers only fire at quantized matmuls: calibrate under an
+        # enabled policy even when serving fp32
+        obs = policy if policy.enabled else preset("w4a8_mse")
+        res = apply_recipe(rec, model, params, batches, policy,
+                           calib_policy=obs)
+        params = res.params
+        if quantizes_weights_offline(rec):
+            # GPTQ left pre-quantized kernels: drop runtime weight QDQ
+            # (the prequant serving convention — re-quantization adds
+            # pure double-quantization noise)
+            policy = replace_enabled(policy, weight=None)
+        recipe_info = {"recipe": rec.name,
+                       "recipe_calibrations": res.n_calibrations}
+        if res.qtree is not None:
+            # the serving path has no static-q plumbing: static scalers
+            # fall back to dynamic-max at prefill/decode
+            print(f"note: recipe {rec.name!r} produced a static q tree; "
+                  "serving ignores it (dynamic-max fallback)",
+                  file=sys.stderr)
     engine = ServeEngine(
         model, params, n_slots=args.n_slots, max_len=args.max_len,
         policy=policy,
@@ -75,12 +122,13 @@ def main() -> int:
         json.dumps(
             {
                 "arch": cfg.name,
-                "policy": args.policy,
+                "policy": policy_name,
                 "requests": len(done),
                 "generated_tokens": total_tokens,
                 "ticks": engine.ticks,
                 "wall_s": round(dt, 3),
                 "tokens_per_s": round(total_tokens / dt, 1),
+                **recipe_info,
             }
         )
     )

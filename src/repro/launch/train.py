@@ -29,6 +29,10 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--reduced", action="store_true",
                     help="use the arch's reduced CPU-scale config")
     ap.add_argument("--policy", default="fp32")
+    ap.add_argument("--recipe", default=None,
+                    help="QuantRecipe name to apply post-training (PTQ on "
+                    "the final weights, e.g. smoothquant+gptq); forces "
+                    "eager unrolled execution for calibration taps")
     ap.add_argument("--qat", action="store_true",
                     help="enable the PWL-STE backward (paper eqn (5))")
     ap.add_argument("--steps", type=int, default=100)
@@ -70,6 +74,10 @@ def make_everything(args):
             "vit_table` for the ViT workload.")
     if args.reduced:
         cfg = cfg.reduced()
+    if args.recipe:
+        # post-training PTQ recipe: calibration observers need eager
+        # per-layer execution (same constraint Calibrator always had)
+        cfg = cfg.replace(scan_layers=False, remat="none")
 
     from repro.core.policy import has_layer_rules
 
@@ -108,12 +116,14 @@ def make_everything(args):
         donate_argnums=(0, 1),
     )
 
-    def eval_fn(params, max_batches: int = 8):
+    def eval_fn(params, max_batches: int = 8, eval_policy=None, q=None):
         losses = []
         for batch in eval_batches(eval_stream, args.seq_len,
                                   min(args.global_batch, 8),
                                   max_batches=max_batches):
-            loss, _ = model.loss(params, batch, policy)
+            loss, _ = model.loss(params, batch,
+                                 eval_policy if eval_policy is not None
+                                 else policy, q=q)
             losses.append(float(loss))
         ppl = float(np.exp(np.mean(losses))) if losses else float("nan")
         return {"eval_loss": float(np.mean(losses)), "eval_ppl": ppl}
@@ -153,6 +163,38 @@ def main() -> int:
         "stragglers": result.stragglers,
         **final_eval,
     }
+    if args.recipe:
+        # post-training PTQ: apply the recipe to the trained weights and
+        # report the quantized eval alongside the fp one
+        from repro.core.policy import preset, replace_enabled
+        from repro.core.recipe import (
+            apply_recipe,
+            get_recipe,
+            quantizes_weights_offline,
+        )
+
+        rec = get_recipe(args.recipe)
+        rpolicy = (preset(rec.policy_preset, n_layers=model.cfg.n_layers)
+                   if rec.policy_preset else policy)
+        batches = [loader.batch_at(s) for s in range(4)]
+        # observers only fire at quantized matmuls: calibrate under an
+        # enabled policy even when the eval policy is fp32 (W4A16 GPTQ)
+        obs = rpolicy if rpolicy.enabled else preset("w4a8_mse")
+        res = apply_recipe(rec, model, params, batches, rpolicy,
+                           calib_policy=obs)
+        eval_policy = rpolicy
+        if quantizes_weights_offline(rec):
+            # GPTQ already QDQ'd the kernels offline: runtime weight
+            # re-quantization would add pure double-quantization noise
+            eval_policy = replace_enabled(rpolicy, weight=None)
+        req = eval_fn(res.params, eval_policy=eval_policy, q=res.qtree)
+        summary.update({
+            "recipe": rec.name,
+            "recipe_policy": rpolicy.name,
+            "recipe_calibrations": res.n_calibrations,
+            "recipe_eval_loss": req["eval_loss"],
+            "recipe_eval_ppl": req["eval_ppl"],
+        })
     print(json.dumps(summary))
     return 0
 

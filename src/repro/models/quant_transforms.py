@@ -1,12 +1,19 @@
-"""Model-level PTQ drivers: calibration -> static scales / SmoothQuant /
-GPTQ / RPTQ applied to a TransformerLM params tree.
+"""Model-level PTQ pass implementations: calibration -> static scales /
+SmoothQuant / GPTQ / RPTQ applied to a TransformerLM params tree.
 
 This is the JAX analogue of INT-FP-QSim's "replace the layers" step at the
 model level: the layers already carry quantizer hooks (policy + optional
 ``q`` static-scale tree); these functions *produce* the folded weights and
 the ``q`` tree from calibration statistics.
 
-All drivers need eager per-layer execution: run the model with
+The canonical driver API is the ``QuantRecipe`` pass pipeline in
+``repro.core.recipe`` — the engine sequences these implementations,
+re-calibrating between param-mutating and stats-consuming passes.  The old
+free-function entry points (``apply_smoothquant``, ``apply_gptq``,
+``rptq_qtree``, ``static_qtree``) remain as deprecation shims that delegate
+to single-pass recipes.
+
+All passes need eager per-layer execution: run the model with
 ``cfg.scan_layers=False`` and ``cfg.remat='none'`` so Calibrator observers
 fire per site (see repro.core.calibration).
 
@@ -28,6 +35,7 @@ observation pass, per-site solves).
 from __future__ import annotations
 
 import re
+import warnings
 from typing import Callable
 
 import jax
@@ -39,7 +47,15 @@ from repro.core import smoothquant as sq_mod
 from repro.core.calibration import Calibrator, max_alpha, mse_alpha
 from repro.core.formats import Format
 from repro.core.gptq import GPTQConfig, gptq_quantize
-from repro.core.policy import Policy, PolicyMap, QuantPolicy, resolve_policy
+from repro.core.policy import (
+    NONE,
+    Policy,
+    PolicyMap,
+    QuantPolicy,
+    resolve_policy,
+)
+
+SiteFilter = Callable[[str], bool]  # matched against the site ADDRESS
 
 
 # ---------------------------------------------------------------------------
@@ -56,8 +72,24 @@ def calibrate(model, params, batches, policy: Policy,
 
 
 def solve_alphas(calib: Calibrator, fmt: Format, method: str = "mse",
-                 per_channel: bool = False) -> dict:
-    return calib.solve(fmt, method=method, per_channel=per_channel)
+                 per_channel: bool = False,
+                 site_filter: SiteFilter | None = None) -> dict:
+    """{site: alpha} for every observed site, all against one format.
+
+    ``site_filter`` (matched against the site *address*) scopes the solve —
+    how recipe passes restrict themselves to e.g. ``*ffn*`` sites.
+    """
+    out = {}
+    for site, st in calib.stats.items():
+        if site_filter is not None and not site_filter(site_address(site)):
+            continue
+        if method == "max":
+            out[site] = max_alpha(st, per_channel=per_channel)
+        elif method == "mse":
+            out[site] = mse_alpha(st, fmt, per_channel=per_channel)
+        else:
+            raise ValueError(f"unknown calibration method {method!r}")
+    return out
 
 
 def site_address(calib_site: str) -> str:
@@ -77,18 +109,22 @@ def site_address(calib_site: str) -> str:
 
 def solve_alphas_for_policy(calib: Calibrator, policy: Policy,
                             method: str = "mse",
-                            per_channel: bool = False) -> dict:
+                            per_channel: bool = False,
+                            site_filter: SiteFilter | None = None) -> dict:
     """Per-site alphas where each site solves for *its* resolved format.
 
     The mixed-precision counterpart of ``solve_alphas``: with a PolicyMap a
     W8A8 endcap block grid-searches its clip range against INT8 while the
     W4A4 interior searches against INT4 — one calibration pass, per-site
     solves.  Sites whose resolved policy has no input quantizer (fp32
-    rules) are skipped.
+    rules) are skipped; ``site_filter`` additionally scopes by address.
     """
     out = {}
     for site, st in calib.stats.items():
-        pol = resolve_policy(policy, site_address(site))
+        addr = site_address(site)
+        if site_filter is not None and not site_filter(addr):
+            continue
+        pol = resolve_policy(policy, addr)
         tq = pol.input
         if tq is None:
             continue
@@ -148,47 +184,59 @@ def build_qtree(n_layers: int, alphas: dict) -> tuple[dict, tuple]:
 
 def static_qtree(calib: Calibrator, fmt, n_layers: int,
                  method: str = "mse", return_report: bool = False):
-    """The paper's static activation calibration (§II-B1) as a q tree.
+    """DEPRECATED shim: the paper's static activation calibration (§II-B1).
 
+    Use a ``static`` recipe pass instead (``get_recipe('static_mse')``).
     ``fmt`` is either a single Format (every site solves against it) or a
     flat-policy/PolicyMap (each site solves against its *resolved* input
     format — the mixed-precision path).  With ``return_report=True`` also
     returns the dropped-site report from ``build_qtree``.
     """
+    _warn_deprecated("static_qtree",
+                     "recipe.get_recipe('static_mse') / a 'static' pass")
+    from repro.core import recipe as rc
+
     if isinstance(fmt, (QuantPolicy, PolicyMap)):
-        alphas = solve_alphas_for_policy(calib, fmt, method=method)
+        policy, fmt_name = fmt, None
     else:
-        alphas = solve_alphas(calib, fmt, method=method)
-    tree, dropped = build_qtree(n_layers, alphas)
+        policy, fmt_name = NONE, fmt.name
+    rec = rc.QuantRecipe("static_qtree_shim", (
+        rc.PassSpec("static", options={"fmt": fmt_name, "method": method}),))
+    res = rc.RecipeEngine(policy=policy, n_layers=n_layers).run(
+        rec, {}, calib=calib)
     if return_report:
-        return tree, dropped
-    return tree
+        return res.qtree, res.dropped_sites
+    return res.qtree
 
 
 # ---------------------------------------------------------------------------
 # SmoothQuant (paper §II-B3)
 # ---------------------------------------------------------------------------
-def _kernel_of(bparams, group: str, name: str):
-    return bparams[group][name]["kernel"]
-
-
-def apply_smoothquant(params, calib: Calibrator, *, alpha: float = 0.5,
-                      plus_one_norm: bool = False) -> dict:
+def _smoothquant_params(params, calib: Calibrator, *, alpha: float = 0.5,
+                        plus_one_norm: bool = False,
+                        site_filter: SiteFilter | None = None
+                        ) -> tuple[dict, int]:
     """Fold SmoothQuant factors into ln1->qkv and ln2->(wi,wg).
 
     Follows the reference implementation: only norm-preceded projections are
     smoothed (o/wo have no foldable producer and stay unsmoothed).  Returns
-    a new params tree; ``params['blocks']`` must be a per-layer list.
+    (new params tree, number of folded sites); ``params['blocks']`` must be
+    a per-layer list.  ``site_filter`` scopes by the fold's anchor address
+    (``blocks.{i}/attn/q`` for the qkv fold, ``blocks.{i}/ffn/wi`` for the
+    MLP fold).
     """
     blocks = params["blocks"]
     assert isinstance(blocks, (list, tuple)), (
-        "apply_smoothquant requires unrolled (scan_layers=False) params")
+        "SmoothQuant requires unrolled (scan_layers=False) params")
+    n_folded = 0
     new_blocks = []
     for i, bp in enumerate(blocks):
         bp = jax.tree_util.tree_map(lambda x: x, bp)  # shallow copy per leaf
-        if "attn" in bp:
+        if "attn" in bp and (site_filter is None
+                             or site_filter(f"blocks.{i}/attn/q")):
             site = f"blocks.{i}/attn/q/in"
             if site in calib.stats:
+                n_folded += 1
                 act_absmax = calib.stats[site].ch_absmax
                 kernels = [bp["attn"][k]["kernel"] for k in ("q", "k", "v")]
                 w_absmax = np.max(
@@ -202,9 +250,11 @@ def apply_smoothquant(params, calib: Calibrator, *, alpha: float = 0.5,
                     bp["attn"][k] = dict(bp["attn"][k])
                     bp["attn"][k]["kernel"] = w * sj[:, None].astype(w.dtype)
                 bp["ln1"] = _fold_norm(bp["ln1"], sj, plus_one_norm)
-        if "ffn" in bp and "wi" in bp["ffn"]:
+        if "ffn" in bp and "wi" in bp["ffn"] and (
+                site_filter is None or site_filter(f"blocks.{i}/ffn/wi")):
             site = f"blocks.{i}/ffn/wi/in"
             if site in calib.stats:
+                n_folded += 1
                 act_absmax = calib.stats[site].ch_absmax
                 names = [k for k in ("wi", "wg") if k in bp["ffn"]]
                 w_absmax = np.max(
@@ -222,7 +272,22 @@ def apply_smoothquant(params, calib: Calibrator, *, alpha: float = 0.5,
         new_blocks.append(bp)
     out = dict(params)
     out["blocks"] = new_blocks
-    return out
+    return out, n_folded
+
+
+def apply_smoothquant(params, calib: Calibrator, *, alpha: float = 0.5,
+                      plus_one_norm: bool = False) -> dict:
+    """DEPRECATED shim: delegate to a single-pass 'smoothquant' recipe."""
+    _warn_deprecated("apply_smoothquant",
+                     "recipe.get_recipe('smoothquant')")
+    from repro.core import recipe as rc
+
+    rec = rc.QuantRecipe("smoothquant_shim", (
+        rc.PassSpec("smoothquant",
+                    options={"alpha": alpha,
+                             "plus_one_norm": plus_one_norm}),))
+    eng = rc.RecipeEngine(policy=NONE, n_layers=len(params["blocks"]))
+    return eng.run(rec, params, calib=calib).params
 
 
 def _fold_norm(norm_params: dict, s: jnp.ndarray, plus_one: bool) -> dict:
@@ -254,13 +319,15 @@ _GPTQ_SITES = {
 }
 
 
-def apply_gptq(params, calib: Calibrator, fmt: Format,
-               cfg: GPTQConfig = GPTQConfig(), *,
-               progress: Callable | None = None) -> tuple[dict, dict]:
+def _gptq_params(params, calib: Calibrator, fmt: Format,
+                 cfg: GPTQConfig = GPTQConfig(), *,
+                 site_filter: SiteFilter | None = None,
+                 progress: Callable | None = None) -> tuple[dict, dict]:
     """Replace every decoder linear kernel with its GPTQ-quantized version.
 
     ``calib`` must have been collected with ``collect_outer=True`` (Hessians
     H = X^T X per site).  Returns (new_params, info-per-site).
+    ``site_filter`` scopes by the kernel's address ``blocks.{i}/{group}/{name}``.
     """
     blocks = params["blocks"]
     assert isinstance(blocks, (list, tuple)), "GPTQ requires unrolled params"
@@ -270,6 +337,9 @@ def apply_gptq(params, calib: Calibrator, fmt: Format,
         bp = jax.tree_util.tree_map(lambda x: x, bp)
         for (group, name), site_suffix in _GPTQ_SITES.items():
             if group not in bp or name not in bp[group]:
+                continue
+            if site_filter is not None and not site_filter(
+                    f"blocks.{i}/{group}/{name}"):
                 continue
             site = f"blocks.{i}/{site_suffix}"
             st = calib.stats.get(site)
@@ -291,6 +361,25 @@ def apply_gptq(params, calib: Calibrator, fmt: Format,
     return out, infos
 
 
+def apply_gptq(params, calib: Calibrator, fmt: Format,
+               cfg: GPTQConfig = GPTQConfig(), *,
+               progress: Callable | None = None) -> tuple[dict, dict]:
+    """DEPRECATED shim: delegate to a single-pass 'gptq' recipe."""
+    _warn_deprecated("apply_gptq", "recipe.get_recipe('gptq')")
+    if progress is not None:  # callbacks are not recipe-serializable
+        return _gptq_params(params, calib, fmt, cfg, progress=progress)
+    from repro.core import recipe as rc
+
+    rec = rc.QuantRecipe("gptq_shim", (
+        rc.PassSpec("gptq", options={
+            "fmt": fmt.name, "percdamp": cfg.percdamp,
+            "blocksize": cfg.blocksize, "group_size": cfg.group_size,
+            "actorder": cfg.actorder}),))
+    res = rc.RecipeEngine(policy=NONE, n_layers=len(params["blocks"])).run(
+        rec, params, calib=calib)
+    return res.params, res.artifacts.get("gptq", {})
+
+
 def params_dtype(params):
     leaves = jax.tree_util.tree_leaves(params)
     for l in leaves:
@@ -302,9 +391,9 @@ def params_dtype(params):
 # ---------------------------------------------------------------------------
 # RPTQ (paper §II-B5)
 # ---------------------------------------------------------------------------
-def rptq_qtree(calib: Calibrator, n_layers: int,
-               num_clusters: int = 8) -> tuple[dict, dict]:
-    """Cluster activation channels per site; per-channel alphas as a q tree.
+def _rptq_alphas(calib: Calibrator, num_clusters: int = 8,
+                 site_filter: SiteFilter | None = None) -> tuple[dict, dict]:
+    """Cluster activation channels per site -> ({site: per-ch alpha}, perms).
 
     Numerically identical to the reorder+cluster-scale scheme (the
     permutation only matters for hardware layout — see core/rptq.py); the
@@ -314,8 +403,34 @@ def rptq_qtree(calib: Calibrator, n_layers: int,
     for site, st in calib.stats.items():
         if st.ch_min is None:
             continue
+        if site_filter is not None and not site_filter(site_address(site)):
+            continue
         res = rptq_mod.solve(st.ch_min, st.ch_max, num_clusters=num_clusters)
         alphas[site] = res.alpha_per_channel
         perms[site] = res.perm
-    tree, _ = build_qtree(n_layers, alphas)
-    return tree, perms
+    return alphas, perms
+
+
+def rptq_qtree(calib: Calibrator, n_layers: int,
+               num_clusters: int = 8) -> tuple[dict, dict]:
+    """DEPRECATED shim: delegate to a single-pass 'rptq' recipe."""
+    _warn_deprecated("rptq_qtree", "recipe.get_recipe('rptq')")
+    from repro.core import recipe as rc
+
+    rec = rc.QuantRecipe("rptq_shim", (
+        rc.PassSpec("rptq", options={"num_clusters": num_clusters}),))
+    res = rc.RecipeEngine(policy=NONE, n_layers=n_layers).run(
+        rec, {}, calib=calib)
+    return res.qtree, res.artifacts.get("rptq_perms", {})
+
+
+# ---------------------------------------------------------------------------
+# Deprecation plumbing
+# ---------------------------------------------------------------------------
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.models.quant_transforms.{old} is deprecated; drive PTQ "
+        f"through the QuantRecipe pipeline instead: {new} "
+        "(see repro.core.recipe)",
+        DeprecationWarning, stacklevel=3,
+    )

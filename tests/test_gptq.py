@@ -3,8 +3,13 @@
 import numpy as np
 import pytest
 
-from repro.core.formats import INT4, INT8
-from repro.core.gptq import GPTQConfig, gptq_quantize, hessian_from_samples
+from repro.core.formats import INT4, INT8, get_format
+from repro.core.gptq import (
+    GPTQConfig,
+    _float_qdq_np,
+    gptq_quantize,
+    hessian_from_samples,
+)
 
 
 def _naive_rtn(w, fmt):
@@ -82,6 +87,27 @@ def test_gptq_group_size():
     e32 = np.linalg.norm(x @ (w - wq_g32)) ** 2
     efull = np.linalg.norm(x @ (w - wq_full)) ** 2
     assert e32 <= efull * 1.1
+
+
+@pytest.mark.parametrize("fmt_name", ["e2m1", "e1m2", "e4m3", "e5m2"])
+def test_float_qdq_np_matches_jnp_reference(fmt_name):
+    """The host-side minifloat QDQ (the perf fix killing the per-column
+    host<->device sync) must agree with ``FloatFormat.qdq_unit`` — the
+    reference the old per-column jnp round-trip used."""
+    import jax.numpy as jnp
+
+    fmt = get_format(fmt_name)
+    rng = np.random.RandomState(7)
+    qm = fmt.qmax_pos
+    xs = np.concatenate([
+        rng.randn(4096) * 0.5 * qm,
+        rng.uniform(-1.5 * qm, 1.5 * qm, 4096),
+        np.linspace(-1.2 * qm, 1.2 * qm, 2049),
+        [0.0, qm, -qm, 2 * qm, -2 * qm],
+    ]).astype(np.float64)
+    ref = np.asarray(fmt.qdq_unit(jnp.asarray(xs)))  # f32 in, f32 out
+    got = _float_qdq_np(xs.astype(np.float32), fmt)
+    np.testing.assert_array_equal(got.astype(np.float32), ref)
 
 
 def test_dead_channels_zeroed():

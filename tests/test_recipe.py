@@ -1,0 +1,279 @@
+"""QuantRecipe pass pipeline (repro.core.recipe).
+
+Covers: bit-exact equivalence of the recipe engine with the correctly
+sequenced manual driver chain on the OPT-proxy forward pass, automatic
+re-calibration between param-mutating and stats-consuming passes, dict
+round-trip, invalid-pass-order / unknown-kind errors, site-scoped passes,
+and the deprecation shims over the legacy free functions.
+"""
+
+import json
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import recipe as rc
+from repro.core.formats import INT4, INT8
+from repro.core.policy import preset
+from repro.models import build_model
+from repro.models import quant_transforms as qt
+from repro.nn.module import unbox
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("opt-tiny").replace(n_layers=2)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    rng = np.random.RandomState(0)
+    batches = [
+        {"tokens": rng.randint(0, 500, (2, 32)).astype(np.int32)}
+        for _ in range(3)
+    ]
+    return cfg, model, params, batches
+
+
+def _calib(model, params, batches, outer=False, policy=None):
+    return qt.calibrate(model, params, batches,
+                        policy or preset("w4a8_mse"), collect_outer=outer)
+
+
+def _assert_trees_equal(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)), a, b)
+
+
+# ---------------------------------------------------------------------------
+# Engine: equivalence with the manual driver chain
+# ---------------------------------------------------------------------------
+def test_composite_bit_exact_with_manual_chain(setup):
+    """smoothquant+gptq+static_mse == the hand-sequenced driver chain with
+    explicit re-calibration after every param mutation (the correct manual
+    pipeline the engine automates)."""
+    cfg, model, params, batches = setup
+    pol = preset("w4a8_mse")
+
+    res = rc.apply_recipe(rc.get_recipe("smoothquant+gptq+static_mse"),
+                          model, params, batches, pol)
+
+    # manual chain: calibrate -> SQ -> recalibrate (Hessians) -> GPTQ ->
+    # recalibrate -> static solve
+    c1 = _calib(model, params, batches)
+    p1, _ = qt._smoothquant_params(params, c1)
+    c2 = _calib(model, p1, batches, outer=True)
+    p2, _ = qt._gptq_params(p1, c2, INT4)
+    c3 = _calib(model, p2, batches)
+    alphas = qt.solve_alphas_for_policy(c3, pol)
+    q_manual, _ = qt.build_qtree(cfg.n_layers, alphas)
+
+    _assert_trees_equal(res.params, p2)
+    _assert_trees_equal(res.qtree, q_manual)
+    assert res.n_calibrations == 3
+
+    # and the forward pass agrees bit-for-bit on the OPT proxy
+    got, _ = model.apply(res.params, batches[0], pol, q=res.qtree)
+    ref, _ = model.apply(p2, batches[0], pol, q=q_manual)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_single_pass_recipes_match_impls(setup):
+    cfg, model, params, batches = setup
+    calib = _calib(model, params, batches, outer=True)
+
+    res = rc.apply_recipe("smoothquant", model, params, batches,
+                          preset("w4a8_mse"), calib=calib)
+    _assert_trees_equal(res.params, qt._smoothquant_params(params, calib)[0])
+    assert res.n_calibrations == 0  # fresh caller calib is reused
+
+    res = rc.apply_recipe("rptq", model, params, batches, preset("w4a8_mse"),
+                          calib=calib)
+    alphas, perms = qt._rptq_alphas(calib)
+    _assert_trees_equal(res.qtree, qt.build_qtree(cfg.n_layers, alphas)[0])
+    assert set(res.artifacts["rptq_perms"]) == set(perms)
+
+
+def test_auto_recalibration_on_stale_stats(setup):
+    """A caller-provided calibrator is invalidated by SmoothQuant: the
+    engine must re-collect before GPTQ consumes Hessians."""
+    cfg, model, params, batches = setup
+    calib = _calib(model, params, batches, outer=True)
+    res = rc.apply_recipe("smoothquant+gptq", model, params, batches,
+                          preset("w4a8_mse"), calib=calib)
+    # initial calib used for SQ; one fresh (Hessian) collection for GPTQ
+    assert res.n_calibrations == 1
+    steps = [s for s, _ in res.steps]
+    assert steps == ["smoothquant", "calibrate", "gptq"]
+
+
+def test_stale_calibration_raises_without_calibrate_fn(setup):
+    cfg, model, params, batches = setup
+    calib = _calib(model, params, batches, outer=True)
+    eng = rc.RecipeEngine(policy=preset("w4a8_mse"), n_layers=cfg.n_layers)
+    with pytest.raises(rc.StaleCalibrationError, match="param-mutating"):
+        eng.run(rc.get_recipe("smoothquant+gptq"), params, calib=calib)
+    # missing Hessians is also a refusal, not a silent no-op
+    calib_no_outer = _calib(model, params, batches)
+    with pytest.raises(rc.StaleCalibrationError, match="Hessians"):
+        eng.run(rc.get_recipe("gptq"), params, calib=calib_no_outer)
+
+
+def test_disabled_observation_policy_rejected(setup):
+    """Observers only fire at quantized matmuls: calibrating under fp32
+    would silently collect nothing and no-op every pass."""
+    cfg, model, params, batches = setup
+    with pytest.raises(rc.RecipeError, match="disabled"):
+        rc.apply_recipe("gptq", model, params, batches, preset("fp32"))
+
+
+# ---------------------------------------------------------------------------
+# Declaration: validation, registry, serialization
+# ---------------------------------------------------------------------------
+def test_invalid_pass_order_rejected():
+    bad = rc.QuantRecipe("bad", (rc.PassSpec("static"),
+                                 rc.PassSpec("smoothquant")))
+    with pytest.raises(rc.RecipeError, match="invalidate"):
+        bad.validate()
+
+
+def test_unknown_kind_and_option_rejected():
+    with pytest.raises(rc.RecipeError, match="unknown pass kind"):
+        rc.QuantRecipe("x", (rc.PassSpec("awq"),)).validate()
+    with pytest.raises(rc.RecipeError, match="unknown option"):
+        rc.QuantRecipe("x", (rc.PassSpec("gptq", options={"bits": 4}),)
+                       ).validate()
+    with pytest.raises(rc.RecipeError, match="no passes"):
+        rc.QuantRecipe("x", ()).validate()
+    with pytest.raises(rc.RecipeError, match="invalid site regex"):
+        rc.QuantRecipe("x", (rc.PassSpec("static", sites="re:("),)
+                       ).validate()
+
+
+def test_registry_and_composition():
+    r = rc.get_recipe("smoothquant+gptq")
+    assert [p.kind for p in r.passes] == ["smoothquant", "gptq"]
+    r = rc.get_recipe("smoothquant+gptq+static_mse")
+    assert [p.kind for p in r.passes] == ["smoothquant", "gptq", "static"]
+    with pytest.raises(rc.RecipeError, match="unknown recipe"):
+        rc.get_recipe("quixotic")
+    with pytest.raises(rc.RecipeError, match="unknown recipe part"):
+        rc.get_recipe("smoothquant+quixotic")
+    assert rc.get_recipe("rptq_w4a8").policy_preset == "w4a8_mse"
+
+
+def test_dict_roundtrip():
+    for name in rc.recipe_names():
+        rec = rc.get_recipe(name)
+        d = json.loads(json.dumps(rc.recipe_to_dict(rec)))
+        assert rc.recipe_from_dict(d) == rec
+    # composed recipes round-trip too
+    rec = rc.get_recipe("smoothquant+gptq+static_mse")
+    assert rc.recipe_from_dict(rc.recipe_to_dict(rec)) == rec
+
+
+def test_as_recipe_coercions():
+    rec = rc.get_recipe("static_mse")
+    assert rc.as_recipe(rec) is rec
+    assert rc.as_recipe("static_mse") == rec
+    assert rc.as_recipe(rc.recipe_to_dict(rec)) == rec
+    with pytest.raises(rc.RecipeError):
+        rc.as_recipe(42)
+
+
+# ---------------------------------------------------------------------------
+# Site scoping
+# ---------------------------------------------------------------------------
+def test_site_scoped_gptq_leaves_attention_untouched(setup):
+    cfg, model, params, batches = setup
+    calib = _calib(model, params, batches, outer=True)
+    rec = rc.QuantRecipe("ffn_gptq", (
+        rc.PassSpec("gptq", sites="*ffn*"),))
+    res = rc.RecipeEngine(policy=preset("w4a8_mse"),
+                          n_layers=cfg.n_layers).run(rec, params, calib=calib)
+    for i, (b_old, b_new) in enumerate(zip(params["blocks"],
+                                           res.params["blocks"])):
+        _assert_trees_equal(b_old["attn"], b_new["attn"])
+        changed = any(
+            not np.array_equal(np.asarray(b_old["ffn"][k]["kernel"]),
+                               np.asarray(b_new["ffn"][k]["kernel"]))
+            for k in b_old["ffn"])
+        assert changed, f"block {i}: no ffn kernel was quantized"
+    assert all(k.split("/")[1] == "ffn" for k in res.artifacts["gptq"])
+
+
+def test_scoped_static_passes_merge(setup):
+    cfg, model, params, batches = setup
+    calib = _calib(model, params, batches)
+    rec = rc.QuantRecipe("split_static", (
+        rc.PassSpec("static", sites="*attn*", options={"fmt": "int8"}),
+        rc.PassSpec("static", sites="*ffn*", options={"fmt": "int4"}),
+    ))
+    res = rc.RecipeEngine(policy=preset("w4a8_mse"),
+                          n_layers=cfg.n_layers).run(rec, {}, calib=calib)
+    b0 = res.qtree["blocks"][0]
+    assert "in_alpha" in b0["attn"]["q"] and "in_alpha" in b0["ffn"]["wi"]
+    # the attn alphas were solved against INT8, ffn against INT4
+    a_attn = qt.solve_alphas(calib, INT8,
+                             site_filter=lambda s: "attn" in s)
+    np.testing.assert_array_equal(
+        np.asarray(b0["attn"]["q"]["in_alpha"]),
+        np.asarray(a_attn["blocks.0/attn/q/in"]))
+    a_ffn = qt.solve_alphas(calib, INT4, site_filter=lambda s: "ffn" in s)
+    np.testing.assert_array_equal(
+        np.asarray(b0["ffn"]["wi"]["in_alpha"]),
+        np.asarray(a_ffn["blocks.0/ffn/wi/in"]))
+
+
+def test_site_aware_showcase_recipe(setup):
+    """FP8 attention takes static-MSE only; INT4/8 FFNs take SQ+GPTQ —
+    one pipeline, PolicyMap-scoped formats."""
+    cfg, model, params, batches = setup
+    res = rc.apply_recipe("fp8attn_mse+int4ffn_sqgptq", model, params,
+                          batches)  # policy from its policy_preset
+    for b_old, b_new in zip(params["blocks"], res.params["blocks"]):
+        _assert_trees_equal(b_old["attn"], b_new["attn"])  # attn untouched
+    b0 = res.qtree["blocks"][0]
+    assert "in_alpha" in b0["attn"]["q"] and "in_alpha" in b0["ffn"]["wi"]
+    pol = preset("w4ffn_fp8attn_mse")
+    logits, _ = model.apply(res.params, batches[0], pol, q=res.qtree)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims
+# ---------------------------------------------------------------------------
+def test_legacy_shims_warn_and_match(setup):
+    cfg, model, params, batches = setup
+    calib = _calib(model, params, batches, outer=True)
+
+    with pytest.warns(DeprecationWarning, match="apply_smoothquant"):
+        sq = qt.apply_smoothquant(params, calib)
+    _assert_trees_equal(sq, qt._smoothquant_params(params, calib)[0])
+
+    with pytest.warns(DeprecationWarning, match="apply_gptq"):
+        gq, infos = qt.apply_gptq(params, calib, INT4)
+    gq_ref, infos_ref = qt._gptq_params(params, calib, INT4)
+    _assert_trees_equal(gq, gq_ref)
+    assert set(infos) == set(infos_ref)
+
+    with pytest.warns(DeprecationWarning, match="static_qtree"):
+        q = qt.static_qtree(calib, INT8, cfg.n_layers)
+    q_ref, _ = qt.build_qtree(cfg.n_layers, qt.solve_alphas(calib, INT8))
+    _assert_trees_equal(q, q_ref)
+
+    with pytest.warns(DeprecationWarning, match="rptq_qtree"):
+        q, perms = qt.rptq_qtree(calib, cfg.n_layers)
+    assert perms and q["blocks"]
+
+
+def test_shims_are_quiet_inside_recipes(setup):
+    """The recipe engine routes through the impls, not the shims."""
+    cfg, model, params, batches = setup
+    calib = _calib(model, params, batches)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        rc.apply_recipe("static_mse", model, params, batches,
+                        preset("w4a8_mse"), calib=calib)
