@@ -51,6 +51,37 @@ def dequantize(codes: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
 
 
 # ---------------------------------------------------------------------------
+# 4-bit code packing (compressed weight storage)
+# ---------------------------------------------------------------------------
+def pack_int4_codes(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack signed 4-bit codes two-per-byte along the last dim (even length).
+
+    Element ``2i`` lands in the low nibble, ``2i+1`` in the high nibble; each
+    nibble is the code's 4-bit two's complement.  Inverse of
+    ``unpack_int4_codes``.
+    """
+    if codes.shape[-1] % 2:
+        raise ValueError(
+            f"pack_int4_codes needs an even last dim, got {codes.shape}"
+        )
+    c = codes.astype(jnp.int32)
+    lo = c[..., 0::2] & 0xF
+    hi = c[..., 1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4_codes(packed: jnp.ndarray) -> jnp.ndarray:
+    """uint8 nibble pairs -> int8 codes; last dim doubles."""
+    p = packed.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    c = jnp.stack([lo, hi], axis=-1).reshape(
+        *p.shape[:-1], p.shape[-1] * 2
+    )
+    return jnp.where(c >= 8, c - 16, c).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
 # QAT: piecewise-linear straight-through estimator (paper eqn (5)).
 # ---------------------------------------------------------------------------
 import functools

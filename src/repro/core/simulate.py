@@ -6,24 +6,44 @@ equivalent of INT-FP-QSim's layer replacement: instead of swapping torch
 modules, the policy flows down the call tree and this module applies the
 quantizer functions f_q^w, f_q^x, f_q^y around the contraction.
 
-Paths:
-  * compute='fp'   : QDQ both operands, contract in high precision
-                     (paper-faithful; the paper uses fp32, we default to fp32
-                     on CPU and bf16-with-fp32-accum for the TPU dry-run).
-  * compute='int8' : beyond-paper — contract int8 codes with int32
-                     accumulation and per-group BF16 rescale (native MXU).
-  * fused=True     : route through the Pallas fused kernel (repro.kernels).
+Execution backends — ``qmatmul`` dispatches to a registered backend, each
+declaring the weight representation it consumes:
+
+  ========== =========== =====================================================
+  backend    consumes    semantics
+  ========== =========== =====================================================
+  ref        dense       QDQ both operands, contract in high precision
+                         (paper-faithful; fp32 on CPU, bf16+f32-accum on TPU)
+  int8       dense       quantize on the fly, contract int8 codes with int32
+                         accumulation and per-group rescale (native MXU)
+  fused      dense       Pallas fused QDQ+matmul kernel (repro.kernels)
+  compressed codes       contract PRE-QUANTIZED weight codes + per-group unit
+                         scales directly (int32 accumulate, per-group
+                         rescale) — HBM never sees a dequantized kernel
+  ========== =========== =====================================================
+
+Selection (``execution_backend``): a ``CompressedKernel`` weight always
+takes the ``compressed`` backend (the representation decides); otherwise
+``policy.fused`` -> fused, ``policy.compute == 'int8'`` with an eligible
+int-ABFP policy -> int8, everything else -> ref.  The dispatch contract
+also polices the mismatch case — should selection ever route compressed
+storage to a dense-consuming backend, qmatmul raises rather than silently
+densifying the kernel (unreachable under the current selection rules,
+which prefer the compressed backend for compressed storage).
 """
 
 from __future__ import annotations
+
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import abfp as abfp_mod
 from repro.core.calibration import Calibrator
-from repro.core.policy import Policy, TensorQuant, resolve_policy
-from repro.core.quantize import maybe_ste
+from repro.core.formats import IntFormat
+from repro.core.policy import Policy, QuantPolicy, TensorQuant, resolve_policy
+from repro.core.quantize import maybe_ste, unpack_int4_codes
 
 
 def _dynamic_max_alpha(x: jnp.ndarray) -> jnp.ndarray:
@@ -100,8 +120,14 @@ def _int8_group_matmul(x, w, tq_in: TensorQuant, tq_w: TensorQuant):
     y[..., nout] = sum_g s_x[..., g] * s_w[g, nout] * (xc_g . wc_g)
     """
     n = tq_in.group
-    xc, xs, _ = abfp_mod.abfp_quantize(x, tq_in.fmt, axis=-1, n=n)
-    wc, ws, _ = abfp_mod.abfp_quantize(w, tq_w.fmt, axis=0, n=n)
+    # honor each operand's scale_dtype so the compressed backend's aligned
+    # path (which quantizes x identically) stays bit-exact with this one
+    xc, xs, _ = abfp_mod.abfp_quantize(
+        x, tq_in.fmt, axis=-1, n=n,
+        scale_dtype=jnp.dtype(tq_in.scale_dtype))
+    wc, ws, _ = abfp_mod.abfp_quantize(
+        w, tq_w.fmt, axis=0, n=n,
+        scale_dtype=jnp.dtype(tq_w.scale_dtype))
     # xc: (..., G, n) int8 ; wc: (N, G, n) int8 (axis 0 moved last by grouping)
     # partial[..., g, nout] — contract the n dim per group, int32 accum.
     partial = jnp.einsum(
@@ -116,9 +142,181 @@ def _int8_group_matmul(x, w, tq_in: TensorQuant, tq_w: TensorQuant):
     return y
 
 
+def _is_compressed(w) -> bool:
+    # name check: serving_transforms imports this module (no cycle)
+    return type(w).__name__ == "CompressedKernel"
+
+
+def _compressed_group_matmul(x, wk, policy: QuantPolicy, *, site: str,
+                             in_alpha, compute_dtype=jnp.float32):
+    """Contract pre-quantized weight codes + unit scales directly.
+
+    Aligned fast path (int-ABFP input whose group matches the stored
+    grouping): quantize x to codes, contract int8xint8 with int32
+    accumulation, rescale per (x-group, w-group) — bit-identical to the
+    ``int8`` backend given identical codes.  Everything else (static /
+    per-tensor / float-format / absent input quantizers) QDQs x per its
+    rule and contracts the fp activations against the codes grouped by the
+    stored structure, rescaling by the weight's unit scales — exactly
+    QDQ(x) @ (codes * scales) without materializing the dense kernel.
+
+    Precision contract: at f32 ``compute_dtype`` (the ServeEngine /
+    benchmark configuration) this matches the ref backend up to f32
+    accumulation order — greedy tokens are asserted identical.  Under a
+    reduced compute dtype (bf16 dry-run graphs) the activation operand is
+    rounded to ``compute_dtype`` exactly like ``_fp_matmul``; the weight
+    side stays codes*scales (int codes are exact in bf16, but the fused
+    product rounding of a dense bf16 operand cannot be reproduced without
+    materializing the kernel) — the same documented
+    equivalent-not-bit-identical deviation the int8 backend has.
+    """
+    codes = wk.codes
+    if wk.packed:
+        codes = unpack_int4_codes(codes)
+    if codes.ndim != 3:
+        raise ValueError(
+            "compressed backend expects rank-3 (N, G, n) codes at apply "
+            f"time, got {codes.shape} (stacked kernels are sliced per "
+            "layer by scan before they reach qmatmul)"
+        )
+    ws = wk.scale.astype(jnp.float32)  # (N, G)
+    N, G, n = codes.shape
+    tq = policy.input
+
+    if (tq is not None and isinstance(tq.fmt, IntFormat)
+            and tq.scaler == "abfp" and tq.group == n):
+        # abfp_quantize zero-pads x along K exactly like the stored codes
+        xc, xs, _ = abfp_mod.abfp_quantize(
+            x, tq.fmt, axis=-1, n=n,
+            scale_dtype=jnp.dtype(tq.scale_dtype),
+        )
+        partial = jnp.einsum(
+            "...gk,ngk->...gn", xc, codes, preferred_element_type=jnp.int32
+        )
+        return jnp.einsum(
+            "...gn,...g,ng->...n", partial.astype(jnp.float32),
+            xs.astype(jnp.float32), ws,
+        )
+
+    xq = qdq_activation(x, tq, axis=-1, site=site + "/in", alpha=in_alpha)
+    # mirror _fp_matmul's activation-operand rounding, then contract in f32
+    xq = xq.astype(compute_dtype).astype(jnp.float32)
+    if wk.pad:
+        xq = jnp.pad(xq, [(0, 0)] * (xq.ndim - 1) + [(0, wk.pad)])
+    xg = xq.reshape(*xq.shape[:-1], G, n)
+    partial = jnp.einsum("...gk,ngk->...gn", xg, codes.astype(jnp.float32))
+    return jnp.einsum("...gn,ng->...n", partial, ws)
+
+
+# ---------------------------------------------------------------------------
+# Execution-backend registry
+# ---------------------------------------------------------------------------
+class ExecBackend(NamedTuple):
+    """One way to execute the quantized contraction.
+
+    ``weight_repr`` declares the weight representation the backend
+    consumes: 'dense' (an (K, N) array) or 'compressed'
+    (``CompressedKernel`` codes + scales).
+    """
+
+    name: str
+    weight_repr: str
+    fn: Callable
+
+
+_BACKENDS: dict[str, ExecBackend] = {}
+
+
+def register_backend(name: str, weight_repr: str = "dense"):
+    def deco(fn):
+        _BACKENDS[name] = ExecBackend(name, weight_repr, fn)
+        return fn
+    return deco
+
+
+def backends() -> dict[str, ExecBackend]:
+    """The registered execution backends (read-only view)."""
+    return dict(_BACKENDS)
+
+
+@register_backend("ref")
+def _ref_backend(x, w, policy, *, site, in_alpha, compute_dtype):
+    """Paper-faithful: QDQ both operands, contract in high precision."""
+    if not policy.enabled:
+        return _fp_matmul(x, w, compute_dtype)
+    xq = qdq_activation(
+        x, policy.input, axis=-1, site=site + "/in", alpha=in_alpha
+    )
+    wq = qdq_weight(w, policy.weight, contract_axis=0)
+    return _fp_matmul(xq, wq, compute_dtype)
+
+
+@register_backend("int8")
+def _int8_backend(x, w, policy, *, site, in_alpha, compute_dtype):
+    """Beyond-paper: real int8 MXU contraction of freshly quantized codes."""
+    return _int8_group_matmul(x, w, policy.input, policy.weight)
+
+
+@register_backend("fused")
+def _fused_backend(x, w, policy, *, site, in_alpha, compute_dtype):
+    """Pallas fused QDQ+matmul (TPU target; interpret on CPU)."""
+    from repro.kernels import ops as kops  # lazy: pallas import
+
+    return kops.abfp_matmul_fused(
+        x, w, policy, interpret=kops.should_interpret()
+    )
+
+
+@register_backend("compressed", weight_repr="compressed")
+def _compressed_backend(x, w, policy, *, site, in_alpha, compute_dtype):
+    """Serve pre-quantized weight codes straight into the contraction."""
+    tq = policy.input
+    if (policy.fused
+            and tq is not None and isinstance(tq.fmt, IntFormat)
+            and tq.scaler == "abfp" and tq.group == w.group):
+        from repro.kernels import ops as kops  # lazy: pallas import
+
+        return kops.quant_matmul_fused(
+            x, w, tq, interpret=kops.should_interpret()
+        )
+    return _compressed_group_matmul(x, w, policy, site=site,
+                                    in_alpha=in_alpha,
+                                    compute_dtype=compute_dtype)
+
+
+def _int8_native_ok(policy: QuantPolicy) -> bool:
+    tin, tw = policy.input, policy.weight
+    return (
+        tin is not None and tw is not None
+        and tin.scaler == "abfp" and tw.scaler == "abfp"
+        and tin.group == tw.group
+        and isinstance(tin.fmt, IntFormat) and isinstance(tw.fmt, IntFormat)
+    )
+
+
+def execution_backend(policy: QuantPolicy, w) -> ExecBackend:
+    """Select the backend for a *resolved* flat policy + weight.
+
+    The weight representation wins: compressed storage always executes in
+    the compressed domain (that backend internally handles every input
+    spec, including fp32/no-input rules, without densifying the kernel).
+    Dense weights follow the policy: fused -> int8 (when the policy is an
+    int-ABFP pair with matched groups) -> ref.
+    """
+    if _is_compressed(w):
+        return _BACKENDS["compressed"]
+    if not policy.enabled:
+        return _BACKENDS["ref"]
+    if policy.fused:
+        return _BACKENDS["fused"]
+    if policy.compute == "int8" and _int8_native_ok(policy):
+        return _BACKENDS["int8"]
+    return _BACKENDS["ref"]
+
+
 def qmatmul(
     x: jnp.ndarray,
-    w: jnp.ndarray,
+    w,
     policy: Policy,
     *,
     site: str = "",
@@ -126,47 +324,33 @@ def qmatmul(
     out_alpha=None,
     compute_dtype=jnp.float32,
 ) -> jnp.ndarray:
-    """Quantized-simulated ``x @ w`` with ``x: (..., K)`` and ``w: (K, N)``.
+    """Quantized-simulated ``x @ w`` with ``x: (..., K)`` and ``w: (K, N)``
+    dense or a ``CompressedKernel`` (codes + per-group scales).
 
     Layers with multi-dim contractions flatten to this canonical form first
     (see nn.linear.DenseGeneral) so the kernels and the int8 path stay simple.
     A site-addressed PolicyMap is resolved here against ``site`` — the one
     chokepoint where per-site mixed precision takes effect (resolution is on
     static strings at trace time; the compiled graph sees a flat policy).
+    The resolved policy + weight representation then pick an execution
+    backend (see module docstring).
     """
     policy = resolve_policy(policy, site)
-    if type(w).__name__ == "CompressedKernel":
-        # int8-stored serving weights (models/serving_transforms): lazily
-        # reconstituted here — the one chokepoint every layer routes through.
-        from repro.models.serving_transforms import decompress_kernel
-
-        w = decompress_kernel(w, dtype=compute_dtype)
-    if not policy.enabled:
-        return _fp_matmul(x, w, compute_dtype)
-
-    if policy.fused:
-        from repro.kernels import ops as kops  # lazy: pallas import
-
-        return kops.abfp_matmul_fused(
-            x, w, policy, interpret=kops.should_interpret()
+    backend = execution_backend(policy, w)
+    if backend.weight_repr == "dense" and _is_compressed(w):
+        # repr-mismatch guard: unreachable under the current selection
+        # (compressed storage always routes to the compressed backend);
+        # raising — instead of silently densifying — surfaces any future
+        # selection bug that would defeat the keep-weights-compressed
+        # invariant as an error rather than a memory regression
+        raise ValueError(
+            f"execution backend {backend.name!r} consumes dense weights "
+            f"but site {site!r} holds compressed storage; selection must "
+            "route CompressedKernel weights to a compressed-consuming "
+            "backend (decompress explicitly if densification is intended)"
         )
-
-    if (
-        policy.compute == "int8"
-        and policy.input is not None
-        and policy.weight is not None
-        and policy.input.scaler == "abfp"
-        and policy.weight.scaler == "abfp"
-        and policy.input.group == policy.weight.group
-    ):
-        y = _int8_group_matmul(x, w, policy.input, policy.weight)
-    else:
-        xq = qdq_activation(
-            x, policy.input, axis=-1, site=site + "/in", alpha=in_alpha
-        )
-        wq = qdq_weight(w, policy.weight, contract_axis=0)
-        y = _fp_matmul(xq, wq, compute_dtype)
-
+    y = backend.fn(x, w, policy, site=site, in_alpha=in_alpha,
+                   compute_dtype=compute_dtype)
     if policy.output is not None:
         y = qdq_activation(
             y, policy.output, axis=-1, site=site + "/out", alpha=out_alpha

@@ -59,11 +59,21 @@ def abfp_qdq(
 ) -> jnp.ndarray:
     """Fused ABFP QDQ along the last dim of a 2-D array (M, K)."""
     M, K = x.shape
-    assert K % n == 0, (K, n)
+    if K % n:
+        raise ValueError(
+            f"last dim K={K} is not a multiple of the ABFP group length "
+            f"n={n}"
+        )
     bk = min(block_k, K)
     bk -= bk % n
+    bk = max(bk, min(n, K))  # block_k < n: one group per tile
     bm = min(block_m, M)
-    assert K % bk == 0 and M % bm == 0, (M, K, bm, bk)
+    if K % bk or M % bm:
+        raise ValueError(
+            f"QDQ dims (M={M}, K={K}) do not tile by blocks "
+            f"(block_m={bm}, block_k={bk}); every dim must divide its "
+            "block (see kernels.ops.fit_block)"
+        )
     grid = (M // bm, K // bk)
     return pl.pallas_call(
         functools.partial(_kernel, n=n, fmt=fmt, scale_dtype=jnp.bfloat16),

@@ -3,6 +3,10 @@
 ``should_interpret()`` — True when no TPU is present, so tests and the
 policy.fused path run the kernel bodies through the Pallas interpreter
 (bit-accurate, slow) on CPU.
+
+``fit_block()`` — the one copy of the block-size back-off every wrapper
+uses: the kernels require each dim to divide its block, so the wrappers
+halve the preferred block until it does.
 """
 
 from __future__ import annotations
@@ -22,15 +26,32 @@ def should_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def fit_block(dim: int, start: int = 256, multiple: int = 1) -> int:
+    """Largest block <= ``start`` that divides ``dim``.
+
+    Halves ``start`` until it divides ``dim`` (bottoming out at
+    ``multiple``); ``multiple`` > 1 keeps the result a multiple of the
+    group length (blocks are counted in units of ``multiple``).
+    """
+    if multiple > 1:
+        if dim % multiple:
+            raise ValueError(
+                f"dim={dim} is not a multiple of the group unit "
+                f"{multiple}; cannot pick a block size"
+            )
+        return fit_block(dim // multiple, max(start // multiple, 1)) * multiple
+    b = start
+    while dim % b and b > 1:
+        b //= 2
+    return b
+
+
 def abfp_qdq(x, fmt, n: int = 64, interpret: bool | None = None):
     """Fused QDQ over the last dim; leading dims are flattened to rows."""
     interpret = should_interpret() if interpret is None else interpret
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
-    m = x2.shape[0]
-    bm = 256
-    while m % bm and bm > 1:
-        bm //= 2
+    bm = fit_block(x2.shape[0])
     y = _qdq_mod.abfp_qdq(x2, fmt, n=n, block_m=bm, interpret=interpret)
     return y.reshape(shape)
 
@@ -65,20 +86,48 @@ def abfp_matmul_fused(x, w, policy: QuantPolicy,
     """Dispatch the fused kernel for a (…, K) x (K, N) quantized matmul."""
     interpret = should_interpret() if interpret is None else interpret
     tq_x, tq_w = policy.input, policy.weight
-    assert tq_x is not None and tq_w is not None, "fused path needs x+w quant"
+    if tq_x is None or tq_w is None:
+        raise ValueError(
+            f"fused path needs both x and w quantizers; policy "
+            f"{policy.name!r} has input={tq_x} weight={tq_w}"
+        )
     n = tq_x.group
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
-    m = x2.shape[0]
-    bm = 256
-    while m % bm and bm > 1:
-        bm //= 2
-    bn = 256
-    while w.shape[1] % bn and bn > 1:
-        bn //= 2
+    bm = fit_block(x2.shape[0])
+    bn = fit_block(w.shape[1])
     kw = dict(n=n, block_m=bm, block_n=bn, interpret=interpret)
     if policy.compute == "int8":
         y = _mm_mod.abfp_matmul_int8(x2, w, tq_x.fmt, tq_w.fmt, **kw)
     else:
         y = _mm_mod.abfp_matmul(x2, w, tq_x.fmt, tq_w.fmt, **kw)
     return y.reshape(*shape[:-1], w.shape[1])
+
+
+def quant_matmul_fused(x, wk, tq_x, interpret: bool | None = None):
+    """Compressed-domain Pallas dispatch: (…, K) x stored codes + scales.
+
+    ``wk`` is a ``CompressedKernel``; packed INT4 codes are unpacked here
+    (the Pallas kernel consumes plain int8 codes).  x is zero-padded to
+    the stored (padded) contraction length so codes and activations tile
+    identically.
+    """
+    from repro.core.quantize import unpack_int4_codes
+
+    interpret = should_interpret() if interpret is None else interpret
+    codes, scales = wk.codes, wk.scale
+    if wk.packed:
+        codes = unpack_int4_codes(codes)
+    N, G, n = codes.shape
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1]).astype(jnp.float32)
+    if wk.pad:
+        x2 = jnp.pad(x2, ((0, 0), (0, wk.pad)))
+    bm = fit_block(x2.shape[0])
+    bn = fit_block(N)
+    bk = fit_block(x2.shape[1], start=512, multiple=n)
+    y = _mm_mod.quant_matmul(
+        x2, codes, scales.astype(jnp.float32), tq_x.fmt, n=n,
+        block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+    )
+    return y.reshape(*shape[:-1], N)

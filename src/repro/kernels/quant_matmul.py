@@ -10,6 +10,10 @@ Variants:
   * ``abfp_matmul``      — fp path (paper-faithful numerics).
   * ``abfp_matmul_int8`` — beyond-paper: per-group int8 codes contracted
     with int32 accumulation (2x MXU throughput on TPU), rescaled per group.
+  * ``quant_matmul``     — compressed-domain serving: the weight arrives as
+    PRE-QUANTIZED int8 codes (N, G, n) + per-group unit scales (N, G); only
+    x is quantized in-kernel.  HBM reads the codes, never a dequantized
+    kernel — the ``compressed`` execution backend's fast path.
 
 Grid = (M/BM, N/BN, K/BK), K innermost so the accumulator lives in VMEM
 scratch across K steps (canonical Pallas matmul schedule).  BM/BN/BK are
@@ -98,15 +102,35 @@ def _int8_kernel(x_ref, w_ref, o_ref, acc_ref, *, n, fmt_x, fmt_w, k_steps):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _check_blocking(M, N, K, bm, bn, bk, n):
+    """Validate grid divisibility with dims/blocks named in the error."""
+    if K % n:
+        raise ValueError(
+            f"contraction dim K={K} is not a multiple of the ABFP group "
+            f"length n={n}"
+        )
+    if M % bm or N % bn or K % bk:
+        raise ValueError(
+            f"matmul dims (M={M}, N={N}, K={K}) do not tile by blocks "
+            f"(block_m={bm}, block_n={bn}, block_k={bk}); every dim must "
+            "divide its block (see kernels.ops.fit_block)"
+        )
+
+
 def _call(kernel, x, w, fmt_x, fmt_w, n, bm, bn, bk, interpret, out_dtype):
     M, K = x.shape
     K2, N = w.shape
-    assert K == K2 and K % n == 0
+    if K != K2:
+        raise ValueError(
+            f"contraction mismatch: x has K={K} but w has K={K2} "
+            f"(x.shape={x.shape}, w.shape={w.shape})"
+        )
     bm = min(bm, M)
     bn = min(bn, N)
     bk = min(bk, K)
     bk -= bk % n
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    bk = max(bk, min(n, K))  # block_k < n: fall back to one group per step
+    _check_blocking(M, N, K, bm, bn, bk, n)
     k_steps = K // bk
     grid = (M // bm, N // bn, k_steps)
     return pl.pallas_call(
@@ -156,3 +180,101 @@ def abfp_matmul_int8(
     fmt_w = fmt_w or INT8
     return _call(_int8_kernel, x, w, fmt_x, fmt_w, n, block_m, block_n,
                  block_k, interpret, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Compressed-domain serving: contract PRE-QUANTIZED weight codes
+# ---------------------------------------------------------------------------
+def _stored_codes_kernel(x_ref, wc_ref, ws_ref, o_ref, acc_ref, *,
+                         n, fmt_x, k_steps):
+    """x is quantized in-VMEM; the weight arrives as codes + unit scales."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)   # (bm, bk)
+    wc = wc_ref[...]                      # (bn, g, n) int8 codes
+    ws = ws_ref[...].astype(jnp.float32)  # (bn, g) unit scales
+    bm, bk = x.shape
+    g = bk // n
+    sx = _scales_tile(x, n, -1) / fmt_x.qmax_pos  # (bm, g)
+    xg = x.reshape(bm, g, n)
+    xc = jnp.clip(jnp.round(xg / sx[..., None]), fmt_x.qmin,
+                  fmt_x.qmax_pos).astype(jnp.int8)
+    # Per-group int8 x stored-int8 -> int32 contraction, then rescale.
+    partial = jax.lax.dot_general(
+        xc, wc, (((2,), (2,)), ((1,), (1,))),
+        preferred_element_type=jnp.int32,
+    )  # (g, bm, bn)
+    scaled = (
+        partial.astype(jnp.float32)
+        * jnp.moveaxis(sx, 1, 0)[:, :, None]
+        * jnp.moveaxis(ws, 1, 0)[:, None, :]
+    )
+    acc_ref[...] += scaled.sum(axis=0)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt_x", "n", "block_m", "block_n", "block_k",
+                     "interpret"),
+)
+def quant_matmul(
+    x: jnp.ndarray, w_codes: jnp.ndarray, w_scales: jnp.ndarray,
+    fmt_x: Format, n: int = 64, block_m: int = 256, block_n: int = 256,
+    block_k: int = 512, interpret: bool = False,
+) -> jnp.ndarray:
+    """Compressed-domain matmul: ``x (M, K)`` vs stored weight codes.
+
+    ``w_codes``: (N, G, n) int8 pre-quantized codes (contraction grouped
+    last, G*n == K); ``w_scales``: (N, G) f32 unit scales.  Only x is
+    quantized (in VMEM, against ``fmt_x``); the contraction is int8 x int8
+    with int32 accumulation and per-group rescale, so the dense kernel is
+    never materialized anywhere — HBM traffic for weights is the codes.
+    """
+    M, K = x.shape
+    if w_codes.ndim != 3:
+        raise ValueError(
+            f"w_codes must be (N, G, n) grouped codes, got {w_codes.shape}"
+        )
+    N, G, n2 = w_codes.shape
+    if n2 != n:
+        raise ValueError(
+            f"stored group length {n2} (w_codes.shape={w_codes.shape}) "
+            f"!= requested n={n}"
+        )
+    if G * n != K:
+        raise ValueError(
+            f"stored codes cover K={G * n} (G={G}, n={n}) but x has K={K}"
+        )
+    if w_scales.shape != (N, G):
+        raise ValueError(
+            f"w_scales shape {w_scales.shape} != (N, G)=({N}, {G})"
+        )
+    bm = min(block_m, M)
+    bn = min(block_n, N)
+    bk = min(block_k, K)
+    bk -= bk % n
+    bk = max(bk, min(n, K))
+    _check_blocking(M, N, K, bm, bn, bk, n)
+    k_steps = K // bk
+    gk = bk // n
+    grid = (M // bm, N // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_stored_codes_kernel, n=n, fmt_x=fmt_x,
+                          k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, gk, n), lambda i, j, k: (j, k, 0)),
+            pl.BlockSpec((bn, gk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_codes, w_scales)

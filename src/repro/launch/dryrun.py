@@ -16,7 +16,7 @@ Options: --policy w4a8_abfp|fp32|... --out-dir artifacts/dryrun
          --remat dots|full|none --microbatches N --compute fp|int8
          --strategy fsdp            (ZeRO-3 rules; §Perf trains)
          --prequant                 (offline weight QDQ; serving)
-         --compress                 (int8-stored weights; serving)
+         --compress                 (per-site compressed weights; serving)
          --kv-on-write              (KV quantize-on-write; serving)
 """
 
@@ -60,21 +60,35 @@ ASSIGNED = [
 def build_cell(cfg: ArchConfig, shape: ShapeSpec, policy: Policy,
                mesh, rules, microbatches: int = 1,
                compress: bool = False):
-    """Returns (fn, args_sds, in_shardings, out_shardings, donate)."""
+    """Returns (fn, args_sds, in_shardings, out_shardings, donate, info).
+
+    ``info`` carries side records computed while building (currently the
+    ``weight_bytes`` accounting of compressed cells — derived from the
+    same SDS trees the cell compiles with, so nothing is traced twice).
+    """
+    info = {}
     model = build_model(cfg)
     boxes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     params_sds, params_axes = unbox(boxes), axes_of(boxes)
     if compress:
-        # int8-stored weights for serving (§Perf): shape-transform the SDS
-        # tree + mirror the logical axes; runtime policy drops weight QDQ.
+        # compressed-domain weights for serving (§Perf): shape-transform
+        # the SDS tree per each kernel's resolved site rule + mirror the
+        # logical axes; runtime policy drops weight QDQ and qmatmul's
+        # compressed backend contracts the stored codes directly.
         from repro.models import serving_transforms as st
 
-        assert shape.kind != "train", "compressed storage is serving-only"
+        if shape.kind == "train":
+            raise ValueError("compressed storage is serving-only; "
+                             f"shape kind {shape.kind!r} trains")
         base_policy = policy
+        dense_sds = params_sds
         params_sds = jax.eval_shape(
             lambda p: st.compress_weights(p, base_policy), params_sds)
         params_axes = st.compress_axes(params_axes, params_sds)
         policy = st.serving_policy(policy)
+        wb = st.weight_bytes_report(dense_sds, params_sds)
+        info["weight_bytes"] = {k: v for k, v in wb.items()
+                                if k != "sites"}
     params_sh = sp.shardings_from_axes(params_axes, mesh, rules, params_sds)
 
     if shape.kind == "train":
@@ -126,7 +140,7 @@ def build_cell(cfg: ArchConfig, shape: ShapeSpec, policy: Policy,
         in_sh = (params_sh, tok_sh, state_sh)
         out_sh = (None, state_sh)
         donate = (2,)
-    return fn, args, in_sh, out_sh, donate
+    return fn, args, in_sh, out_sh, donate, info
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
@@ -180,9 +194,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     # before serving transforms strip the weight quantizer from the runtime
     # policy (the stored weights keep their offline format either way)
     policy_bits = rf.policy_bits_report(cfg, policy)
-    if prequant and policy.enabled and any(
+    if prequant and not compress and policy.enabled and any(
             p.weight is not None for p in policies_of(policy)):
         # serving mode: weights pre-quantized offline, no runtime weight QDQ
+        # (--compress subsumes this: build_cell applies the full transform)
         from repro.models.serving_transforms import serving_policy
 
         policy = serving_policy(policy)
@@ -196,6 +211,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "policy": policy.name, "remat": cfg.remat,
         "scan_layers": cfg.scan_layers,
         "policy_bits": policy_bits,
+        # resident weight bytes under compression (the storage-side
+        # counterpart of policy_bits) — filled from build_cell's pass-1
+        # info so the SDS trees are only traced once
+        "weight_bytes": None,
         "recipe": recipe_dict,
         "microbatches": microbatches, "tag": tag,
         "strategy": strategy, "prequant": prequant,
@@ -205,9 +224,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     }
     try:
         # ---- pass 1: the runnable artifact (scan-over-layers) -----------
-        fn, args, in_sh, out_sh, donate = build_cell(
+        fn, args, in_sh, out_sh, donate, cell_info = build_cell(
             cfg, shape, policy, mesh, rules, microbatches,
             compress=compress)
+        rec["weight_bytes"] = cell_info.get("weight_bytes")
         t0 = time.time()
         with mesh, shd.use_rules(mesh, rules):
             jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
@@ -249,7 +269,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 if cfg.family == "encdec":
                     kw["encoder_layers"] = k * mult
                 small = cfg.replace(**kw)
-                sfn, sargs, sin, sout, sdon = build_cell(
+                sfn, sargs, sin, sout, sdon, _ = build_cell(
                     small, shape, policy, mesh, rules, microbatches,
                     compress=compress)
                 with mesh, shd.use_rules(mesh, rules):
@@ -323,7 +343,9 @@ def main() -> int:
     ap.add_argument("--prequant", action="store_true",
                     help="serving mode: weights pre-quantized offline")
     ap.add_argument("--compress", action="store_true",
-                    help="serving mode: int8-stored weights + bf16 scales")
+                    help="serving mode: per-site compressed weights (int "
+                    "codes + group scales; INT4 packed) consumed by the "
+                    "compressed execution backend; records weight_bytes")
     ap.add_argument("--kv-on-write", action="store_true",
                     help="serving mode: quantize KV entries at write time")
     ap.add_argument("--kv-int8", action="store_true",

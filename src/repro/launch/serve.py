@@ -29,6 +29,11 @@ def main() -> int:
                     help="QuantRecipe name applied to the weights before "
                     "serving (e.g. smoothquant+gptq); calibrates on "
                     "synthetic prompts")
+    ap.add_argument("--compress", action="store_true",
+                    help="compressed-domain serving: store each kernel per "
+                    "its resolved site rule (int codes + group scales; "
+                    "INT4 packs two-per-byte) and contract the codes "
+                    "directly — reports resident weight bytes")
     ap.add_argument("--n-slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--n-requests", type=int, default=8)
@@ -101,8 +106,19 @@ def main() -> int:
                   file=sys.stderr)
     engine = ServeEngine(
         model, params, n_slots=args.n_slots, max_len=args.max_len,
-        policy=policy,
+        policy=policy, compress=args.compress,
     )
+    compress_info = {}
+    if args.compress:
+        from repro.models.serving_transforms import weight_bytes_summary
+
+        wb = engine.weight_bytes
+        if wb["compressed_sites"] == 0:
+            import sys
+
+            print("note: --compress found no int-format weight rules to "
+                  "compress (all sites dense)", file=sys.stderr)
+        compress_info = weight_bytes_summary(wb)
 
     rng = np.random.RandomState(args.seed)
     for uid in range(args.n_requests):
@@ -129,6 +145,7 @@ def main() -> int:
                 "wall_s": round(dt, 3),
                 "tokens_per_s": round(total_tokens / dt, 1),
                 **recipe_info,
+                **compress_info,
             }
         )
     )

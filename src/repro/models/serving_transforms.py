@@ -3,23 +3,42 @@
 The paper's simulator QDQs weights *inside every forward pass* — right for
 QAT/research, but at serving time weights are frozen, so:
 
-  * ``prequantize_weights``  — apply the weight quantizer ONCE offline and
-    serve with ``serving_policy(policy)`` (weight quantizer dropped).
-    Numerically identical (ABFP QDQ is idempotent: values already on the
-    per-group grid map to themselves) and removes the entire per-layer
-    runtime QDQ chain (convert/div/round/clamp/mul over every kernel) from
-    the decode graph.  §Perf: -35% memory term on qwen2 decode_32k.
+  * ``prequantize_weights``  — apply each site's resolved weight quantizer
+    ONCE offline and serve with ``serving_policy(policy)`` (weight
+    quantizers dropped).  Numerically identical (ABFP and channel-max QDQ
+    are idempotent: values already on the grid map to themselves) and
+    removes the entire per-layer runtime QDQ chain from the decode graph.
+    §Perf: -35% memory term on qwen2 decode_32k.
 
-  * ``compress_weights``     — store kernels as int8 CODES + BF16
-    per-group scales (the paper's storage story made real).  Dense
-    dequantizes lazily; XLA fuses (codes * scale) into the matmul operand
-    read, so weight HBM traffic drops ~2x (bf16 -> int8) on top of
-    removing the QDQ chain.  Also halves checkpoint size.
+  * ``compress_weights``     — store kernels as int CODES + per-group unit
+    scales (the paper's storage story made real).  The ``compressed``
+    execution backend (``core.simulate``) contracts the codes directly —
+    int32 accumulation, per-group rescale — so HBM never sees a
+    dequantized kernel.  INT4 codes pack two-per-byte, so resident weight
+    bytes track the policy's bit budget.  Also shrinks checkpoints.
 
-Both transforms walk ``kernel`` leaves of TransformerLM-family params and
-preserve tree structure otherwise.  The tied embedding table is NOT
-touched: it feeds the input lookup too, and pre-quantizing it would change
-input embeddings (the runtime path only QDQs the readout matmul).
+Both transforms are **PolicyMap-aware**: every ``kernel`` leaf is resolved
+against its site address (the same contract ``qmatmul`` uses), so a mixed
+map compresses each kernel against *its* rule:
+
+  * int-format weight rules (``abfp`` or ``channel_max`` scalers) become
+    ``CompressedKernel`` codes + scales;
+  * float-format rules (e.g. FP8-E4M3 attention) are QDQ'd offline but
+    stay dense — there is no integer code to store;
+  * fp32 (disabled) rules leave the kernel untouched.
+
+Site addresses are derived from the param-tree path: dict keys join with
+``/``, list entries under ``blocks`` become ``blocks.{i}`` (the unrolled
+naming) and a scan-stacked ``blocks`` dict contributes ``block`` (the
+shared scan site — layer-indexed rules cannot resolve there, same
+constraint the runtime has).  This matches the TransformerLM/ViT param
+layout; exotic families (encdec/hybrid) only support flat policies here
+(a flat policy resolves identically at every site, so the walk is exact).
+
+The tied embedding table is NOT touched: it feeds the input lookup too,
+and pre-quantizing it would change input embeddings (the runtime path only
+QDQs the readout matmul).  MoE expert banks store their weights as plain
+leaves (not ``kernel`` entries) and are likewise left dense.
 """
 
 from __future__ import annotations
@@ -28,102 +47,143 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import abfp as abfp_mod
+from repro.core.formats import IntFormat
 from repro.core.policy import (
     Policy,
     PolicyMap,
+    PolicyRule,
     QuantPolicy,
     TensorQuant,
-    map_policies,
+    as_policy_map,
+    has_site_rules,
+    resolve_policy,
 )
-
-
-def _uniform_weight_quant(policy: Policy) -> TensorQuant | None:
-    """The single weight quantizer shared by every enabled site.
-
-    The offline weight transforms walk ``kernel`` leaves without site
-    addresses, so a PolicyMap must be weight-uniform to use them;
-    site-heterogeneous weight storage is rejected with a clear error rather
-    than silently compressing every kernel with one rule's format.
-    """
-    if isinstance(policy, QuantPolicy):
-        return policy.weight
-    # include disabled (fp32) rules: an fp32 site's weight must NOT be
-    # quantized/compressed, so {None, int4} is heterogeneous too
-    tqs = {p.weight for p in policy.policies}
-    if len(tqs) > 1:
-        raise NotImplementedError(
-            f"PolicyMap {policy.name!r} mixes weight quantizers across "
-            "sites (fp32 rules count); offline prequantize/compress need a "
-            "weight-uniform map (per-site compressed storage is future work)"
-        )
-    return tqs.pop() if tqs else None
+from repro.core.quantize import pack_int4_codes, quantize, unpack_int4_codes
+from repro.core.simulate import qdq_weight
 
 
 @jax.tree_util.register_pytree_node_class
 class CompressedKernel:
-    """int codes + per-group unit scales; metadata rides as pytree aux."""
+    """int codes + per-group unit scales; metadata rides as pytree aux.
 
-    __slots__ = ("codes", "scale", "axis", "pad", "k", "dtype")
+    codes: ``(N, G, n)`` int8 — contraction grouped last — or, when
+    ``packed``, ``(N, G, n//2)`` uint8 nibble pairs (INT4 storage).
+    scale: ``(N, G)`` f32 unit scales (alpha / qmax).  ``fmt_name`` records
+    the stored integer format so reports/backends can reason about the bit
+    budget without the policy in hand.
+    """
+
+    __slots__ = ("codes", "scale", "axis", "pad", "k", "dtype", "fmt_name",
+                 "packed")
 
     def __init__(self, codes, scale, axis: int, pad: int, k: int,
-                 dtype: str):
-        self.codes = codes  # (..., N, G, n) int8 — contraction grouped last
-        self.scale = scale  # (..., N, G) bf16 unit scales (alpha / qmax)
+                 dtype: str, fmt_name: str = "int8", packed: bool = False):
+        self.codes = codes
+        self.scale = scale
         self.axis = axis
         self.pad = pad
         self.k = k
         self.dtype = dtype
+        self.fmt_name = fmt_name
+        self.packed = packed
 
     def tree_flatten(self):
         return (self.codes, self.scale), (self.axis, self.pad, self.k,
-                                          self.dtype)
+                                          self.dtype, self.fmt_name,
+                                          self.packed)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(children[0], children[1], *aux)
 
+    @property
+    def group(self) -> int:
+        """Stored group length n (in codes, not bytes — packing-aware)."""
+        n = self.codes.shape[-1]
+        return n * 2 if self.packed else n
+
     def __repr__(self):
         return (f"CompressedKernel(codes={getattr(self.codes, 'shape', None)},"
-                f" scale={getattr(self.scale, 'shape', None)})")
+                f" scale={getattr(self.scale, 'shape', None)},"
+                f" fmt={self.fmt_name}, packed={self.packed})")
 
 
 def _walk_kernels(params, fn):
-    """Apply fn(kernel_leaf) to every 'kernel' entry; keep structure."""
+    """Apply ``fn(site, kernel_leaf)`` to every 'kernel' entry; keep
+    structure.  ``site`` follows the runtime site-address contract (see
+    module docstring)."""
 
-    def rec(node):
+    def rec(node, path):
         if isinstance(node, dict):
             out = {}
             for k, v in node.items():
                 if k == "kernel" and (hasattr(v, "ndim")
-                                      or isinstance(v, tuple)):
-                    out[k] = fn(v)
+                                      or isinstance(v, (tuple,
+                                                        CompressedKernel))):
+                    out[k] = fn("/".join(path), v)
+                elif (k == "blocks" and isinstance(v, (list, tuple))
+                        and not hasattr(v, "ndim")):
+                    t = type(v)
+                    vals = [rec(b, path + [f"blocks.{i}"])
+                            for i, b in enumerate(v)]
+                    out[k] = t(*vals) if hasattr(v, "_fields") else t(vals)
+                elif k == "blocks" and isinstance(v, dict):
+                    # scan-stacked layers share one trace/site ('block')
+                    out[k] = rec(v, path + ["block"])
                 else:
-                    out[k] = rec(v)
+                    out[k] = rec(v, path + [k])
             return out
         if isinstance(node, (list, tuple)) and not hasattr(node, "ndim"):
             t = type(node)
-            vals = [rec(v) for v in node]
+            vals = [rec(v, path + [str(i)]) for i, v in enumerate(node)]
             if hasattr(node, "_fields"):  # NamedTuple
                 return t(*vals)
             return t(vals)
         return node
 
-    return rec(params)
+    return rec(params, [])
+
+
+def _site_weight(policy: Policy, site: str) -> TensorQuant | None:
+    return resolve_policy(policy, site).weight
+
+
+# Param-tree top-level keys whose runtime site addresses do NOT follow the
+# path-derived naming _walk_kernels produces (hybrid: 'shared/q' at runtime
+# vs 'shared/attn/q' in the tree; encdec: family-level 'attn/...' names vs
+# 'encoder/...'/'decoder/...' paths).  Site-rule maps would silently
+# mis-resolve there, so only flat policies (which resolve identically at
+# every site) are accepted for those families.
+_NON_CONTRACT_KEYS = ("mamba_groups", "shared", "lora", "encoder", "decoder")
+
+
+def _check_site_rules_supported(params, policy: Policy, what: str) -> None:
+    if not has_site_rules(policy):
+        return  # flat / zero-rule map: resolution is site-independent
+    if isinstance(params, dict) and any(
+            k in params for k in _NON_CONTRACT_KEYS):
+        raise NotImplementedError(
+            f"{what} with a site-rule PolicyMap supports the "
+            "TransformerLM/ViT param layout only: this tree's param paths "
+            f"(top-level keys {sorted(params)}) do not match the runtime "
+            "site addresses, so per-site rules would silently mis-resolve "
+            "— use a flat policy for hybrid/encdec families"
+        )
 
 
 def prequantize_weights(params, policy: Policy):
-    """QDQ every kernel offline per ``policy.weight``; see module doc."""
-    tq = _uniform_weight_quant(policy)
-    if tq is None:
-        return params
-    assert tq.scaler == "abfp", "prequantize supports the ABFP weight path"
+    """QDQ every kernel offline per its site's resolved weight rule.
 
-    def one(w):
-        axis = 0 if w.ndim == 2 else 1
-        return abfp_mod.abfp_qdq(
-            w, tq.fmt, axis=axis, n=tq.group,
-            scale_dtype=jnp.dtype(tq.scale_dtype),
-        ).astype(w.dtype)
+    fp32-rule sites are left untouched; all scalers ``qdq_weight`` supports
+    (abfp / channel_max / dynamic_max) round-trip exactly at serving time.
+    """
+    _check_site_rules_supported(params, policy, "prequantize_weights")
+
+    def one(site, w):
+        tq = _site_weight(policy, site)
+        if tq is None or isinstance(w, CompressedKernel):
+            return w
+        return qdq_weight(w, tq, contract_axis=w.ndim - 2).astype(w.dtype)
 
     return _walk_kernels(params, one)
 
@@ -131,40 +191,104 @@ def prequantize_weights(params, policy: Policy):
 def serving_policy(policy: Policy) -> Policy:
     """The runtime policy to pair with prequantized/compressed weights.
 
-    Maps are handled rule-wise: every entry drops its weight quantizer.
+    Weight quantizers drop rule-wise — EXCEPT at the tied-readout site
+    ``embed/attend``: the embedding table is never transformed offline (it
+    feeds the input lookup too), so that one matmul keeps its runtime
+    weight QDQ or compressed serving would silently diverge from the QDQ
+    simulation on tied-embedding models.  The result is therefore always a
+    PolicyMap carrying the keep-rule (inert on untied models, whose
+    ``lm_head`` kernel IS transformed offline).
     """
     def drop_weight(p: QuantPolicy) -> QuantPolicy:
         if p.weight is None:
             return p
         return p.replace(name=p.name + "_served", weight=None)
 
-    if isinstance(policy, PolicyMap):
-        if all(p.weight is None for p in policy.policies):
-            return policy
-        return policy.map_policies(drop_weight,
-                                   name=policy.name + "_served")
-    return map_policies(policy, drop_weight)
+    pm = as_policy_map(policy)
+    if all(p.weight is None for p in pm.policies):
+        return policy
+    keep = pm.resolve("embed/attend")
+    rules = tuple(PolicyRule(r.pattern, drop_weight(r.policy))
+                  for r in pm.rules)
+    if keep.weight is not None:
+        rules = (PolicyRule("embed/attend", keep),) + rules
+    return PolicyMap(name=pm.name + "_served", rules=rules,
+                     default=drop_weight(pm.default))
 
 
 # ---------------------------------------------------------------------------
 # Real compressed storage: int codes + scales
 # ---------------------------------------------------------------------------
-def compress_weights(params, policy: Policy):
-    """kernel -> CompressedKernel(int8 codes, bf16 unit scales)."""
-    tq = _uniform_weight_quant(policy)
-    assert tq is not None and tq.scaler == "abfp"
+def compress_kernel(w, tq: TensorQuant) -> CompressedKernel:
+    """One dense kernel -> CompressedKernel per an int-format weight rule.
 
-    def one(w):
-        # contraction always sits at rank-2 (K,N / E,K,N / stacked L,K,N):
-        # store it END-RELATIVE so per-layer slices under scan still line up
+    The contraction always sits at rank-2 (K,N / stacked L,K,N): it is
+    stored END-RELATIVE so per-layer slices under scan still line up.
+    ``abfp`` rules group K by ``tq.group``; ``channel_max`` rules store one
+    group spanning all of K with the per-output-channel alpha (bit-exact
+    with the runtime channel-max QDQ).  INT4 codes pack two-per-byte.
+    """
+    if not isinstance(tq.fmt, IntFormat):
+        raise ValueError(
+            f"compress_kernel stores integer codes; got format "
+            f"{tq.fmt_name!r} (float-format rules stay dense — see "
+            "compress_weights)"
+        )
+    axis = w.ndim - 2
+    if tq.scaler == "abfp":
         codes, scales, (pad, k) = abfp_mod.abfp_quantize(
-            w, tq.fmt, axis=w.ndim - 2, n=tq.group, dtype=jnp.int8,
+            w, tq.fmt, axis=axis, n=tq.group, dtype=jnp.int8,
             scale_dtype=jnp.dtype(tq.scale_dtype),
         )
-        # `scales` are already UNIT scales (alpha/qmax); keep f32 — they are
-        # 1/group of the codes count, and f32 keeps serving numerics exact.
-        return CompressedKernel(codes, scales.astype(jnp.float32),
-                                -2, pad, k, str(w.dtype))
+    elif tq.scaler == "channel_max":
+        # one group spanning K, alpha = per-output-channel max (matches
+        # core.simulate.qdq_weight's channel_max path bit-for-bit)
+        wm = jnp.moveaxis(w, axis, -1)[..., None, :]  # (..., N, 1, K)
+        alpha = jnp.maximum(
+            jnp.max(jnp.abs(wm), axis=-1, keepdims=True), 1e-8
+        )
+        codes, scale = quantize(wm, alpha, tq.fmt, dtype=jnp.int8)
+        scales = scale[..., 0]
+        pad, k = 0, w.shape[axis]
+    else:
+        raise ValueError(
+            f"compress_kernel supports 'abfp'/'channel_max' weight "
+            f"scalers, got {tq.scaler!r}"
+        )
+    packed = tq.fmt.bits <= 4 and codes.shape[-1] % 2 == 0
+    if packed:
+        codes = pack_int4_codes(codes)
+    # `scales` are already UNIT scales (alpha/qmax); keep f32 — they are
+    # 1/group of the codes count, and f32 keeps serving numerics exact.
+    return CompressedKernel(codes, scales.astype(jnp.float32),
+                            -2, pad, k, str(w.dtype),
+                            fmt_name=tq.fmt.name, packed=packed)
+
+
+def compress_weights(params, policy: Policy):
+    """kernel -> CompressedKernel per the kernel's resolved site rule.
+
+    Per-site behavior (the weight-uniform restriction is gone):
+      * int-format rule (abfp / channel_max) — stored as codes + scales,
+        consumed directly by the ``compressed`` execution backend;
+      * float-format rule (e.g. FP8-E4M3) — QDQ'd offline, stays dense;
+      * fp32 (disabled) rule — untouched.
+    Pair with ``serving_policy(policy)`` at runtime.
+    """
+    _check_site_rules_supported(params, policy, "compress_weights")
+
+    def one(site, w):
+        if isinstance(w, CompressedKernel):
+            return w
+        tq = _site_weight(policy, site)
+        if tq is None:
+            return w
+        if isinstance(tq.fmt, IntFormat) and tq.scaler in ("abfp",
+                                                           "channel_max"):
+            return compress_kernel(w, tq)
+        # float formats / exotic scalers: no integer codes to store —
+        # prequantize offline so serving still matches the QDQ simulation
+        return qdq_weight(w, tq, contract_axis=w.ndim - 2).astype(w.dtype)
 
     return _walk_kernels(params, one)
 
@@ -175,7 +299,8 @@ def compress_axes(axes_tree, compressed_sds_tree):
     For a kernel with axes (a_contract, a_out) the codes are laid out
     (a_out, G, n) and scales (a_out, G) — sharding follows the surviving
     output axis; group dims replicate.  Pytree aux metadata is copied from
-    the compressed SDS tree so treedefs match exactly under jit.
+    the compressed SDS tree so treedefs match exactly under jit.  Dense
+    (uncompressed / fp32-rule) kernels keep their original axes.
     """
 
     from repro.dist.sharding import is_axes_leaf as _is_axes
@@ -189,7 +314,8 @@ def compress_axes(axes_tree, compressed_sds_tree):
                 codes=lead + (a_out, None, None),
                 scale=lead + (a_out, None),
                 axis=sds_node.axis, pad=sds_node.pad, k=sds_node.k,
-                dtype=sds_node.dtype,
+                dtype=sds_node.dtype, fmt_name=sds_node.fmt_name,
+                packed=sds_node.packed,
             )
         if isinstance(ax_node, dict):
             return {k: rec(ax_node[k], sds_node[k]) for k in ax_node}
@@ -207,7 +333,10 @@ def compress_axes(axes_tree, compressed_sds_tree):
 def decompress_kernel(entry: CompressedKernel, dtype=None):
     """codes+scales -> dense kernel (fused by XLA into the consumer)."""
     dt = jnp.dtype(dtype or entry.dtype)
-    w = entry.codes.astype(dt) * entry.scale.astype(dt)[..., None]
+    codes = entry.codes
+    if entry.packed:
+        codes = unpack_int4_codes(codes)
+    w = codes.astype(dt) * entry.scale.astype(dt)[..., None]
     # (…, N, G, n) -> flatten -> unpad -> contraction back to rank-2
     w = w.reshape(*w.shape[:-2], w.shape[-2] * w.shape[-1])
     if entry.pad:
@@ -217,3 +346,76 @@ def decompress_kernel(entry: CompressedKernel, dtype=None):
 
 def is_compressed(kernel) -> bool:
     return isinstance(kernel, CompressedKernel)
+
+
+# ---------------------------------------------------------------------------
+# Resident-weight-byte accounting (dryrun / serve / benchmark reports)
+# ---------------------------------------------------------------------------
+def _leaf_bytes(x) -> int:
+    """Bytes of an array or ShapeDtypeStruct."""
+    size = 1
+    for d in x.shape:
+        size *= int(d)
+    return size * jnp.dtype(x.dtype).itemsize
+
+
+def weight_bytes_report(dense_params, served_params) -> dict:
+    """Per-site resident weight bytes: dense tree vs its served transform.
+
+    Walks the ``kernel`` leaves of both trees in lockstep and reports the
+    bytes each representation keeps resident in HBM — the cost-model
+    counterpart of ``launch.roofline.policy_bits_report`` (bits are the
+    budget; this is what the storage actually spends, scale overhead
+    included).
+    """
+    sites = []
+
+    dense_by_site = {}
+
+    def record(site, w):
+        dense_by_site[site] = w
+        return w
+
+    _walk_kernels(dense_params, record)
+
+    def one(site, w):
+        dense_w = dense_by_site[site]
+        if isinstance(w, CompressedKernel):
+            resident = _leaf_bytes(w.codes) + _leaf_bytes(w.scale)
+            kind = "compressed"
+            fmt = w.fmt_name + ("_packed" if w.packed else "")
+        else:
+            resident = _leaf_bytes(w)
+            kind = "dense"
+            fmt = str(w.dtype)
+        sites.append({
+            "site": site, "kind": kind, "fmt": fmt,
+            "dense_bytes": _leaf_bytes(dense_w),
+            "resident_bytes": resident,
+        })
+        return w
+
+    _walk_kernels(served_params, one)
+    dense_total = sum(s["dense_bytes"] for s in sites)
+    resident_total = sum(s["resident_bytes"] for s in sites)
+    return {
+        "sites": sites,
+        "dense_kernel_bytes": dense_total,
+        "resident_kernel_bytes": resident_total,
+        "compressed_sites": sum(s["kind"] == "compressed" for s in sites),
+        "dense_sites": sum(s["kind"] == "dense" for s in sites),
+        "ratio": resident_total / max(dense_total, 1),
+    }
+
+
+def weight_bytes_summary(report: dict) -> dict:
+    """Flat JSON-row form of a ``weight_bytes_report`` (the shape the
+    launchers and benchmark tables both emit)."""
+    return {
+        "compressed_sites": report["compressed_sites"],
+        "dense_sites": report["dense_sites"],
+        "dense_weight_mb": round(report["dense_kernel_bytes"] / 1e6, 3),
+        "resident_weight_mb": round(
+            report["resident_kernel_bytes"] / 1e6, 3),
+        "weight_bytes_ratio": round(report["ratio"], 4),
+    }

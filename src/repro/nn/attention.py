@@ -13,6 +13,12 @@ Three compute paths:
 
 The *window* is a traced per-layer scalar so scan-over-layers can alternate
 local/global (gemma2) without unrolling: window >= S means global.
+
+Serving note: the q/k/v/o projection kernels may arrive as
+``CompressedKernel`` codes + scales (per-site compressed storage) — they
+flow through ``Dense.apply`` into qmatmul's execution-backend dispatch
+untouched, so compressed mixed-precision maps (e.g. dense FP8 attention
+projections next to compressed INT4 FFNs) need no special handling here.
 """
 
 from __future__ import annotations

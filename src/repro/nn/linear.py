@@ -61,14 +61,11 @@ class Dense:
         """q: optional quant-state slice {'in_alpha': ...} for static scales.
 
         ``policy`` may be a site-addressed PolicyMap — qmatmul resolves it
-        against this layer's site address (``self.name``)."""
+        against this layer's site address (``self.name``).  The kernel may
+        be dense or a ``CompressedKernel`` (int codes + group scales):
+        qmatmul's execution-backend dispatch consumes the codes directly
+        (compressed backend) or reconstitutes lazily for dense backends."""
         kernel = params["kernel"]
-        if type(kernel).__name__ == "CompressedKernel":
-            # compressed storage (serving): int codes + bf16 group scales,
-            # dequantized lazily — XLA fuses into the matmul operand read.
-            from repro.models.serving_transforms import decompress_kernel
-
-            kernel = decompress_kernel(kernel, dtype=self.dtype)
         if "smooth" in params:  # SmoothQuant runtime-divide form
             x = x / params["smooth"].astype(x.dtype)
         in_alpha = None if q is None else q.get("in_alpha")

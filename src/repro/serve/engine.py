@@ -14,6 +14,13 @@ Fixed-shape design — the jitted decode step never recompiles:
 
 Quantized serving: pass a policy; weights/activations get ABFP QDQ inside
 prefill/decode exactly as in training (the paper's inference story).
+
+Compressed serving (``compress=True``): weights are compressed ONCE at
+engine construction against each kernel's *resolved* site rule
+(``models.serving_transforms.compress_weights``) and the runtime policy
+drops its weight quantizers; qmatmul's ``compressed`` execution backend
+then contracts the stored codes directly, so decode never dequantizes a
+kernel.  ``engine.weight_bytes`` records the resident-byte accounting.
 """
 
 from __future__ import annotations
@@ -58,11 +65,20 @@ class ServeEngine:
         max_len: int = 512,
         policy: Policy = QuantPolicy(),
         prefill_bucket: int = 64,
+        compress: bool = False,
     ):
         self.model = model
-        self.params = params
         kv_cache_mode(policy)  # engine-global cache storage: fail fast on
         # maps whose rules disagree on kv_cache
+        self.weight_bytes = None
+        if compress:
+            from repro.models import serving_transforms as st
+
+            served = st.compress_weights(params, policy)
+            self.weight_bytes = st.weight_bytes_report(params, served)
+            params = served
+            policy = st.serving_policy(policy)
+        self.params = params
         self.policy = policy
         self.n_slots = n_slots
         self.max_len = max_len

@@ -306,16 +306,22 @@ def test_layer_rules_rejected_by_families_without_layer_sites():
     reject_layer_rules(W4)  # flat always ok
 
 
-def test_prequant_rejects_fp32_rule_map(opt_setup):
-    """Regression: an fp32 rule means that site's kernel must NOT be
-    prequantized — weight-uniformity check counts disabled rules."""
+def test_prequant_respects_fp32_rule_sites(opt_setup):
+    """An fp32 rule means that site's kernel is NOT prequantized — the
+    per-site walk leaves it untouched while other sites QDQ offline."""
     from repro.models.serving_transforms import prequantize_weights
 
     cfg, model, params, batch = opt_setup
-    pm = PolicyMap(rules=(("embed/attend", NONE),),
+    pm = PolicyMap(rules=(("blocks.0/*", NONE),),
                    default=preset("w4a4_abfp"))
-    with pytest.raises(NotImplementedError, match="weight-uniform"):
-        prequantize_weights(params, pm)
+    pre = prequantize_weights(params, pm)
+    # fp32-rule site: identical object, untouched
+    assert (pre["blocks"][0]["ffn"]["wi"]["kernel"]
+            is params["blocks"][0]["ffn"]["wi"]["kernel"])
+    # quantized-rule site: QDQ'd offline
+    assert not np.allclose(
+        np.asarray(pre["blocks"][1]["ffn"]["wi"]["kernel"]),
+        np.asarray(params["blocks"][1]["ffn"]["wi"]["kernel"]))
 
 
 def test_fp32_rule_disables_site(opt_setup):
@@ -430,20 +436,31 @@ def test_serving_policy_map_drops_weights():
     pm = preset("w4a4_abfp+w8a8_ends", n_layers=4)
     served = serving_policy(pm)
     assert served.name.endswith("_served")
-    assert all(p.weight is None for p in served.policies)
+    # every site's runtime weight quantizer drops — EXCEPT the tied
+    # readout, whose table is never transformed offline
+    assert served.resolve("blocks.1/ffn/wi").weight is None
+    assert served.resolve("blocks.0/attn/q").weight is None
+    assert served.resolve("embed/attend").weight is not None
     assert served.resolve("blocks.1/ffn/wi").input is not None
 
 
-def test_compress_rejects_weight_heterogeneous_map():
-    from repro.models.serving_transforms import _uniform_weight_quant
+def test_compress_weight_heterogeneous_map_per_site(opt_setup):
+    """The weight-uniform restriction is gone: a heterogeneous map
+    compresses each kernel against its resolved site rule."""
+    from repro.models import serving_transforms as st
 
-    pm = preset("w4a4_abfp+w8a8_ends", n_layers=4)
-    with pytest.raises(NotImplementedError, match="weight-uniform"):
-        _uniform_weight_quant(pm)
-    # weight-uniform map (differing only in activations) passes
-    a8 = QuantPolicy(name="a8", input=TensorQuant("int8"),
-                     weight=TensorQuant("int4"))
-    a4 = QuantPolicy(name="a4", input=TensorQuant("int4"),
-                     weight=TensorQuant("int4"))
-    ok = PolicyMap(rules=(("blocks.0/*", a8),), default=a4)
-    assert _uniform_weight_quant(ok) == TensorQuant("int4")
+    cfg, model, params, batch = opt_setup
+    pm = preset("w4a4_abfp+w8a8_ends", n_layers=cfg.n_layers)
+    comp = st.compress_weights(params, pm)
+    last = cfg.n_layers - 1
+    k_end = comp["blocks"][0]["ffn"]["wi"]["kernel"]
+    k_mid = comp["blocks"][1]["ffn"]["wi"]["kernel"]
+    assert st.is_compressed(k_end) and k_end.fmt_name == "int8"
+    assert st.is_compressed(k_mid) and k_mid.fmt_name == "int4"
+    assert k_mid.packed and not k_end.packed
+    assert st.is_compressed(comp["blocks"][last]["attn"]["q"]["kernel"])
+    # forward parity: compressed + served map == dense + full map
+    a, _ = model.apply(params, batch, pm)
+    b, _ = model.apply(comp, batch, st.serving_policy(pm))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
