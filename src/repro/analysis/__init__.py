@@ -1,0 +1,25 @@
+"""qlint: whole-pipeline static analysis for quantization configs.
+
+Public surface:
+  * ``lint(cfg, policy, recipe=None, ...) -> Report`` — analyze one launch
+    tuple symbolically (``repro.analysis.qlint``).
+  * ``Diagnostic`` / ``Report`` / ``Severity`` / ``CODES`` — the coded
+    diagnostic registry (``repro.analysis.diagnostics``).
+  * CLI: ``python -m repro.launch.lint`` (human text + ``--json``).
+
+This ``__init__`` stays dependency-light (no jax import at package-import
+time) so the runtime shims in ``core.policy`` can lazy-import the check
+functions cheaply.
+"""
+
+from repro.analysis.diagnostics import CODES, Diagnostic, Report, Severity
+
+__all__ = ["CODES", "Diagnostic", "Report", "Severity", "lint"]
+
+
+def lint(*args, **kw):
+    """Lazy forwarding to :func:`repro.analysis.qlint.lint` (keeps the
+    package import free of the jax-importing analysis passes)."""
+    from repro.analysis.qlint import lint as _lint
+
+    return _lint(*args, **kw)

@@ -1,0 +1,116 @@
+"""QL3xx: kernel/launch feasibility — int32 accumulator bounds, block
+divisibility, VMEM footprint — all computed from shapes, never traced.
+
+Message text is shared with the runtime typed errors (see
+``analysis.messages``): hitting the runtime exception and reading the lint
+finding should feel like the same diagnosis.
+"""
+
+from __future__ import annotations
+
+from repro.analysis import messages as msg
+from repro.analysis.backend_lint import (
+    _Dedup,
+    symbolic_backend,
+    weight_compressible,
+)
+from repro.core.formats import IntFormat
+from repro.core.policy import Policy, QuantPolicy, resolve_policy
+from repro.kernels.ops import fit_block
+
+
+def _int_accum_spec(pol: QuantPolicy, K: int, *,
+                    compressed_storage: bool):
+    """(n_contracted, qmax_x, qmax_w) of the active int32-accumulation
+    path at a site, or None when accumulation stays float.
+
+    int32 paths: the int8 backend, the fused kernel under compute='int8',
+    and the compressed backend's aligned fast path (int-ABFP input whose
+    group matches the stored grouping).
+    """
+    tin, tw = pol.input, pol.weight
+    backend = symbolic_backend(pol, compressed_storage=compressed_storage)
+    if backend == "compressed":
+        if tw is None or not isinstance(tw.fmt, IntFormat):
+            return None
+        stored_group = tw.group if tw.scaler == "abfp" else K
+        if (tin is not None and isinstance(tin.fmt, IntFormat)
+                and tin.scaler == "abfp" and tin.group == stored_group):
+            return (min(stored_group, K), tin.fmt.qmax_pos, tw.fmt.qmax_pos)
+        return None  # misaligned inputs take the f32 grouped path
+    if backend == "int8" or (backend == "fused" and pol.compute == "int8"):
+        if tin is None or tw is None:
+            return None
+        if not (isinstance(tin.fmt, IntFormat)
+                and isinstance(tw.fmt, IntFormat)):
+            return None
+        return (min(tin.group, K), tin.fmt.qmax_pos, tw.fmt.qmax_pos)
+    return None
+
+
+def lint_kernels(cfg, policy: Policy, sites, *, compress: bool,
+                 shape=None) -> list:
+    """QL301-QL304 over the model's matmul + attention sites."""
+    dd = _Dedup()
+    for site, K, N, mult in sites:
+        pol = resolve_policy(policy, site)
+        stored = compress and weight_compressible(pol.weight)
+
+        spec = _int_accum_spec(pol, K, compressed_storage=stored)
+        if spec is not None:
+            n_acc, qx, qw = spec
+            bound = int(n_acc * qx * qw)
+            if bound > msg.INT32_MAX:
+                dd.add(
+                    "QL301", site, pol.name,
+                    msg.int32_overflow_message(
+                        site, K, n_acc, int(qx).bit_length() + 1,
+                        int(qw).bit_length() + 1, bound),
+                    hint="shrink the ABFP group (channel_max spans all "
+                         "of K), or use the fp-accumulation ref backend",
+                )
+
+        backend = symbolic_backend(pol, compressed_storage=stored)
+        if backend == "fused" and pol.input is not None:
+            n = pol.input.group
+            if K % n:
+                # quant_matmul._check_blocking raises exactly this
+                dd.add(
+                    "QL302", site, pol.name,
+                    msg.abfp_group_message(K, n, where=site),
+                    hint="pick a group length dividing K (the non-fused "
+                         "backends zero-pad instead)",
+                )
+            else:
+                bm, bn = 256, fit_block(N)
+                bk = min(512, K)
+                bk -= bk % n
+                bk = max(bk, min(n, K))
+                est = msg.vmem_estimate_bytes(bm, bn, bk)
+                if est > msg.VMEM_BUDGET_BYTES:
+                    dd.add(
+                        "QL303", site, pol.name,
+                        msg.vmem_message(site, est, bm, bn, bk),
+                        hint="shrink the ABFP group or the block sizes",
+                    )
+
+    # attention sequence-vs-block tiling (flash/blockwise runtime assert)
+    if shape is not None and shape.kind in ("train", "prefill") \
+            and not getattr(cfg, "is_attention_free", False):
+        S = cfg.vit_seq_len if cfg.family == "vit" else shape.seq_len
+        qb = min(cfg.q_block, S)
+        kb = min(cfg.kv_block, S)
+        if S % qb or S % kb:
+            dd.out.append(_attention_diag(S, S, qb, kb))
+    return dd.out
+
+
+def _attention_diag(S: int, T: int, bq: int, bk: int):
+    from repro.analysis.diagnostics import Diagnostic
+
+    return Diagnostic(
+        code="QL304",
+        site="*/attn",
+        message=msg.attention_block_message(S, T, bq, bk),
+        hint="pad the sequence or set q_block/kv_block to divisors of it",
+    )

@@ -1,0 +1,63 @@
+"""Shared message formatters for runtime errors and QL3xx diagnostics.
+
+The converted typed errors in ``kernels/`` / ``nn/attention.py`` and the
+static analyzer's kernel-feasibility diagnostics must tell the same story
+in the same words — a user who hits the runtime error should find the lint
+code by pasting the message, and vice versa.  This module owns those
+strings; it is import-free (no jax, no repro) so both the kernels and the
+analyzer can use it without cycles.
+"""
+
+from __future__ import annotations
+
+INT32_MAX = 2**31 - 1
+
+# Per-core VMEM budget the launch-feasibility estimate checks against
+# (TPU v5e-class figure from the accelerator guide; deliberately the
+# conservative end so the warning fires before the compiler's allocator
+# does).
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+def attention_block_message(S: int, T: int, bq: int, bk: int) -> str:
+    """Flash/blockwise attention sequence-vs-block divisibility."""
+    return (
+        f"attention sequence lengths (S={S}, T={T}) do not tile by the "
+        f"attention blocks (block_q={bq}, block_k={bk}); pad the sequence "
+        "or choose block sizes dividing it"
+    )
+
+
+def abfp_group_message(K: int, n: int, where: str = "") -> str:
+    """Fused-path K % group-length divisibility (matches
+    kernels.quant_matmul._check_blocking's phrasing)."""
+    loc = f" at {where}" if where else ""
+    return (
+        f"contraction dim K={K}{loc} is not a multiple of the ABFP group "
+        f"length n={n}"
+    )
+
+
+def int32_overflow_message(site: str, K: int, group: int, bits_x: int,
+                           bits_w: int, bound: int) -> str:
+    n_acc = min(group, K)
+    return (
+        f"int32 accumulator can overflow at {site}: contracting "
+        f"{n_acc} elements of int{bits_x} x int{bits_w} codes bounds the "
+        f"per-group partial sum at {bound} > {INT32_MAX} (2^31-1)"
+    )
+
+
+def vmem_estimate_bytes(bm: int, bn: int, bk: int) -> int:
+    """Fused-matmul working-set estimate: x/w tiles at bf16 in + f32 in
+    kernel, accumulator + output tile in f32 (mirrors quant_matmul's
+    scratch layout; deliberately simple — it bounds, not measures)."""
+    return 4 * (bm * bk + bn * bk) + 4 * (2 * bm * bn)
+
+
+def vmem_message(site: str, est: int, bm: int, bn: int, bk: int) -> str:
+    return (
+        f"estimated fused-kernel VMEM working set at {site} is "
+        f"{est / 2**20:.1f} MiB (block_m={bm}, block_n={bn}, block_k={bk}) "
+        f"vs the ~{VMEM_BUDGET_BYTES / 2**20:.0f} MiB/core budget"
+    )

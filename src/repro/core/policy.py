@@ -264,15 +264,16 @@ def has_layer_rules(policy: Policy) -> bool:
 
 def check_scan_compatible(policy: Policy, scan_layers: bool,
                           model_name: str = "") -> None:
-    """Raise if layer-indexed rules are used with scan-over-layers."""
-    if scan_layers and has_layer_rules(policy):
-        raise ValueError(
-            f"PolicyMap {policy.name!r} has layer-indexed rules "
-            f"({[r.pattern for r in policy.rules]}) which need per-layer "
-            f"sites: run {model_name or 'the model'} with "
-            "cfg.scan_layers=False (the same eager-unrolled constraint "
-            "calibration already has)"
-        )
+    """Raise if layer-indexed rules are used with scan-over-layers.
+
+    Thin shim over the static analyzer (QL004): the runtime error and the
+    lint finding are the same message, produced in one place.
+    """
+    from repro.analysis.policy_lint import scan_compat_diagnostic
+
+    d = scan_compat_diagnostic(policy, scan_layers, model_name)
+    if d is not None:
+        raise ValueError(d.message)
 
 
 def reject_layer_rules(policy: Policy, model_name: str = "") -> None:
@@ -281,14 +282,13 @@ def reject_layer_rules(policy: Policy, model_name: str = "") -> None:
     encdec/hybrid address their matmuls with family-level names (``attn``,
     ``shared/q``, ``mamba/...``) — no ``blocks.{i}`` prefix exists there, so
     layer-indexed rules would silently resolve to the default everywhere.
+    Thin shim over the static analyzer (QL005).
     """
-    if has_layer_rules(policy):
-        raise NotImplementedError(
-            f"{model_name or 'this model family'} does not thread "
-            f"per-layer site names; layer-indexed PolicyMap rules "
-            f"({[r.pattern for r in policy.rules]}) are unsupported here — "
-            "use pattern rules like '*attn*' / 'mamba*' instead"
-        )
+    from repro.analysis.policy_lint import layer_rules_family_diagnostic
+
+    d = layer_rules_family_diagnostic(policy, model_name)
+    if d is not None:
+        raise NotImplementedError(d.message)
 
 
 def policies_of(policy: Policy) -> tuple:
@@ -321,20 +321,16 @@ def kv_cache_mode(policy: Policy) -> str:
     agree on it; heterogeneous kv_cache across sites is rejected here rather
     than silently mis-sizing the cache.
     """
-    if isinstance(policy, QuantPolicy):
-        return policy.kv_cache
     # disabled (fp32) rules count: cache storage keys off kv_cache alone
     # (fill_cache stores int8 whenever kv_cache == 'int8', enabled or not),
-    # so an fp32 rule's 'requant' is heterogeneous with int8 elsewhere
-    modes = {p.kv_cache for p in policy.policies}
-    if len(modes) > 1:
-        raise ValueError(
-            f"PolicyMap {policy.name!r} mixes kv_cache modes {sorted(modes)} "
-            "(fp32 rules count: cache storage is structural); KV-cache "
-            "storage is engine-global — set it on every entry with "
-            "with_kv_cache(policy, mode)"
-        )
-    return modes.pop()
+    # so an fp32 rule's 'requant' is heterogeneous with int8 elsewhere.
+    # Thin shim over the static analyzer (QL007).
+    from repro.analysis.policy_lint import kv_mode_diagnostic
+
+    mode, d = kv_mode_diagnostic(policy)
+    if d is not None:
+        raise ValueError(d.message)
+    return mode
 
 
 def with_kv_cache(policy: Policy, mode: str) -> Policy:

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.messages import attention_block_message
+
 NEG_INF = -1e30
 
 
@@ -94,7 +96,8 @@ def flash_attention(
     scale = D**-0.5 if scale is None else scale
     bq = min(block_q, S)
     bk = min(block_k, T)
-    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    if S % bq or T % bk:
+        raise ValueError(attention_block_message(S, T, bq, bk))
     k_steps = T // bk
     grid = (BH, S // bq, k_steps)
     return pl.pallas_call(

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.messages import abfp_group_message
 from repro.core.formats import Format, IntFormat
 
 
@@ -28,8 +29,10 @@ def abfp_qdq_ref(x: jnp.ndarray, fmt: Format, n: int = 64,
     """Reference ABFP quantize-dequantize along ``axis``."""
     axis = axis % x.ndim
     xm = jnp.moveaxis(x, axis, -1)
+    if xm.shape[-1] % n:
+        raise ValueError(abfp_group_message(xm.shape[-1], n,
+                                            where="abfp_qdq_ref"))
     g = xm.shape[-1] // n
-    assert xm.shape[-1] % n == 0
     xg = xm.reshape(*xm.shape[:-1], g, n).astype(jnp.float32)
     alpha = _group_scales(x, axis, n)[..., None]
     scale = alpha / fmt.qmax_pos
@@ -67,10 +70,17 @@ def int8_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, fmt_x: Format,
                     fmt_w: Format, n: int = 64) -> jnp.ndarray:
     """Reference native-int path: per-group int codes, int32 accum,
     per-group rescale."""
-    assert isinstance(fmt_x, IntFormat) and isinstance(fmt_w, IntFormat)
+    if not (isinstance(fmt_x, IntFormat) and isinstance(fmt_w, IntFormat)):
+        raise TypeError(
+            "int8_matmul_ref accumulates integer codes: both formats must "
+            f"be IntFormat, got fmt_x={fmt_x!r} fmt_w={fmt_w!r}")
     M, K = x.shape
     K2, N = w.shape
-    assert K == K2 and K % n == 0
+    if K != K2:
+        raise ValueError(
+            f"contraction mismatch: x has K={K} but w has K={K2}")
+    if K % n:
+        raise ValueError(abfp_group_message(K, n, where="int8_matmul_ref"))
     g = K // n
     sx = _group_scales(x, -1, n) / fmt_x.qmax_pos  # (M, g)
     sw = _group_scales(w, 0, n) / fmt_w.qmax_pos  # (N, g)

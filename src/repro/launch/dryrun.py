@@ -150,7 +150,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              logits_chunk: int | None = None, out_dir: str | None = None,
              strategy: str | None = None, prequant: bool = False,
              compress: bool = False, kv_on_write: bool = False,
-             kv_int8: bool = False, tag: str = "") -> dict:
+             kv_int8: bool = False, tag: str = "",
+             no_lint: bool = False) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     # --recipe tags the compiled cell with the offline PTQ method whose
@@ -201,6 +202,28 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         from repro.models.serving_transforms import serving_policy
 
         policy = serving_policy(policy)
+    if not no_lint:
+        # pre-flight gate: lint the final (policy, shape, flags) tuple
+        # before building the mesh or spending any compile time on it
+        from repro.analysis.qlint import lint as qlint_lint
+
+        lrep = qlint_lint(cfg, policy, recipe_name, shape=shape,
+                          compress=compress, prequant=prequant,
+                          scan_layers=cfg.scan_layers)
+        for d in lrep.warnings:
+            print(f"qlint [dryrun] {d.render()}", file=sys.stderr)
+        if lrep.errors:
+            return {
+                "arch": arch, "shape": shape_name,
+                "policy": policy.name, "recipe": recipe_dict,
+                "scan_layers": cfg.scan_layers, "tag": tag,
+                "prequant": prequant, "compress": compress,
+                "kv_on_write": kv_on_write, "kv_int8": kv_int8,
+                "status": "lint_error",
+                "lint": [d.to_dict() for d in lrep.errors],
+                "error": "qlint: " + "; ".join(
+                    f"{d.code} {d.message}" for d in lrep.errors),
+            }
     mesh = make_production_mesh(multi_pod=multi_pod)
     rules = sp.fit_batch_rule(sp.rules_for(cfg, shape, strategy=strategy),
                               shape.global_batch, mesh)
@@ -352,6 +375,8 @@ def main() -> int:
                     help="serving mode: REAL int8 KV-cache storage")
     ap.add_argument("--out-dir", default="artifacts/dryrun")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the qlint pre-flight gate")
     args = ap.parse_args()
 
     cells = []
@@ -360,7 +385,8 @@ def main() -> int:
             for shape in SHAPES:
                 cells.append((arch, shape))
     else:
-        assert args.arch and args.shape, "--arch/--shape or --all"
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape are required unless --all is given")
         cells.append((args.arch, args.shape))
 
     failures = 0
@@ -372,7 +398,8 @@ def main() -> int:
             compute=args.compute, logits_chunk=args.logits_chunk,
             strategy=args.strategy, prequant=args.prequant,
             compress=args.compress, kv_on_write=args.kv_on_write,
-            kv_int8=args.kv_int8, out_dir=args.out_dir, tag=args.tag)
+            kv_int8=args.kv_int8, out_dir=args.out_dir, tag=args.tag,
+            no_lint=args.no_lint)
         status = rec["status"]
         if status == "ok":
             t = rec["terms"]

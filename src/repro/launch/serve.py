@@ -39,6 +39,8 @@ def main() -> int:
     ap.add_argument("--n-requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the qlint pre-flight gate")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -72,6 +74,12 @@ def main() -> int:
     if rec is not None:
         # calibration observers need eager per-layer execution
         cfg = cfg.replace(scan_layers=False, remat="none")
+    if not args.no_lint:
+        # pre-flight gate: errors abort before any weights are built
+        from repro.launch.lint import preflight
+
+        preflight(cfg, policy, rec, compress=args.compress,
+                  scan_layers=cfg.scan_layers, where="serve")
     model = build_model(cfg)
     params = unbox(model.init(jax.random.PRNGKey(args.seed)))
     if rec is not None:

@@ -51,6 +51,8 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--metrics", default=None)
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--abfp-n", type=int, default=64)
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the qlint pre-flight gate")
     return ap
 
 
@@ -87,6 +89,16 @@ def make_everything(args):
         cfg = cfg.replace(scan_layers=False)
     if args.qat and policy.enabled:
         policy = policy.with_ste(True)
+
+    if not getattr(args, "no_lint", False):
+        # pre-flight gate: errors abort before any weights are built
+        from repro.configs.base import ShapeSpec
+        from repro.launch.lint import preflight
+
+        shape = ShapeSpec("train_cli", args.seq_len, args.global_batch,
+                          "train")
+        preflight(cfg, policy, args.recipe or None, shape=shape,
+                  scan_layers=cfg.scan_layers, where="train")
 
     model = build_model(cfg)
     params = unbox(model.init(jax.random.PRNGKey(args.seed)))

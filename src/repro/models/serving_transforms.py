@@ -153,22 +153,21 @@ def _site_weight(policy: Policy, site: str) -> TensorQuant | None:
 # vs 'shared/attn/q' in the tree; encdec: family-level 'attn/...' names vs
 # 'encoder/...'/'decoder/...' paths).  Site-rule maps would silently
 # mis-resolve there, so only flat policies (which resolve identically at
-# every site) are accepted for those families.
-_NON_CONTRACT_KEYS = ("mamba_groups", "shared", "lora", "encoder", "decoder")
+# every site) are accepted for those families.  The key list lives with
+# the analyzer (repro.analysis.policy_lint.NON_CONTRACT_KEYS) so lint and
+# runtime can't drift; this alias keeps the old import path working.
+from repro.analysis.policy_lint import NON_CONTRACT_KEYS as _NON_CONTRACT_KEYS  # noqa: E402,E501
 
 
 def _check_site_rules_supported(params, policy: Policy, what: str) -> None:
-    if not has_site_rules(policy):
-        return  # flat / zero-rule map: resolution is site-independent
-    if isinstance(params, dict) and any(
-            k in params for k in _NON_CONTRACT_KEYS):
-        raise NotImplementedError(
-            f"{what} with a site-rule PolicyMap supports the "
-            "TransformerLM/ViT param layout only: this tree's param paths "
-            f"(top-level keys {sorted(params)}) do not match the runtime "
-            "site addresses, so per-site rules would silently mis-resolve "
-            "— use a flat policy for hybrid/encdec families"
-        )
+    # thin shim over the static analyzer (QL008): same message, one source
+    if not isinstance(params, dict):
+        return
+    from repro.analysis.policy_lint import non_contract_layout_diagnostic
+
+    d = non_contract_layout_diagnostic(policy, list(params), what)
+    if d is not None:
+        raise NotImplementedError(d.message)
 
 
 def prequantize_weights(params, policy: Policy):

@@ -29,6 +29,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.messages import attention_block_message
 from repro.core.policy import Policy, resolve_policy
 from repro.core.simulate import qdq_activation
 from repro.dist import sharding as shd
@@ -231,7 +232,8 @@ class Attention:
         T = kh.shape[1]
         qb, kb = min(self.q_block, S), min(self.kv_block, T)
         nq, nk = S // qb, T // kb
-        assert S % qb == 0 and T % kb == 0, (S, T, qb, kb)
+        if S % qb or T % kb:
+            raise ValueError(attention_block_message(S, T, qb, kb))
         G = self.n_heads // self.n_kv
         scale = self._scale()
         qh, kh, vh = self._maybe_quant_qkv(policy, qh, kh, vh, q)

@@ -85,10 +85,12 @@ class ServeEngine:
         self.prefill_bucket = prefill_bucket
 
         state = model.init_decode_state(n_slots, max_len)
-        assert isinstance(state, DecodeState), (
-            "ServeEngine drives TransformerLM-family models; got "
-            f"{type(state).__name__}"
-        )
+        if not isinstance(state, DecodeState):
+            raise TypeError(
+                "ServeEngine drives TransformerLM-family models; got "
+                f"{type(state).__name__} from "
+                f"{type(model).__name__}.init_decode_state"
+            )
         self.state = state._replace(
             position=jnp.zeros((n_slots,), jnp.int32)
         )
@@ -125,9 +127,13 @@ class ServeEngine:
 
     # -------------------------------------------------------------- public
     def submit(self, req: Request):
-        assert len(req.prompt) + req.max_new_tokens <= self.max_len, (
-            "request exceeds engine max_len"
-        )
+        need = len(req.prompt) + req.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request exceeds engine max_len: prompt of "
+                f"{len(req.prompt)} tokens + max_new_tokens="
+                f"{req.max_new_tokens} needs {need} > max_len={self.max_len}"
+            )
         self.queue.append(req)
 
     def _insert_state(self, slot: int, sub: DecodeState, prompt_len: int,
@@ -138,12 +144,16 @@ class ServeEngine:
         def upd(full, part):
             if getattr(full, "ndim", 0) <= b_ax:
                 return full  # per-layer scalars (cache length metadata)
-            assert part.shape[b_ax] == 1, part.shape
-            assert part.shape[:b_ax] == full.shape[:b_ax], (
-                part.shape, full.shape)
-            assert part.shape[b_ax + 1:] == full.shape[b_ax + 1:], (
-                "prefill cache shape mismatch — prefill with the engine's "
-                f"max_len: {part.shape} vs {full.shape}")
+            if part.shape[b_ax] != 1:
+                raise ValueError(
+                    f"prefill state must be batch-1 along axis {b_ax} to "
+                    f"scatter into a slot; got shape {part.shape}")
+            if (part.shape[:b_ax] != full.shape[:b_ax]
+                    or part.shape[b_ax + 1:] != full.shape[b_ax + 1:]):
+                raise ValueError(
+                    "prefill cache shape mismatch — prefill with the "
+                    f"engine's max_len: got {part.shape} vs engine "
+                    f"{full.shape} (batch axis {b_ax})")
             start = [0] * full.ndim
             start[b_ax] = slot
             return jax.lax.dynamic_update_slice(

@@ -93,7 +93,7 @@ def test_engine_rejects_oversized_request(setup):
     cfg, model, params = setup
     eng = ServeEngine(model, params, n_slots=1, max_len=16,
                       policy=preset("fp32"))
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="exceeds engine max_len"):
         eng.submit(Request(uid=0, prompt=np.zeros(12, np.int32),
                            max_new_tokens=8))
 
