@@ -529,10 +529,19 @@ def serving_table(rep: C.Report, steps: int):
     Throughput (tok/s) is recorded for both engines; on CPU the compressed
     path pays unpack/einsum overhead — the claim is about bytes + parity,
     the TPU win is the dryrun's ``weight_bytes``/roofline record.
+
+    Paged-KV rows (PagedServeEngine): token identity vs the fixed-slot
+    engine on the same trace, tokens/sec at two offered-load points (queue
+    at slot capacity vs 4x oversubscribed — the paged pool admits by page
+    availability, so throughput holds while the fixed engine's utilization
+    story degrades), and resident-KV-byte accounting for INT8 pages
+    (per-(page, head) scales reported separately; the <= 0.5x claim is on
+    code bytes vs the fp16-equivalent occupancy).
     """
     import time
 
-    from repro.serve.engine import Request, ServeEngine
+    from repro.core.policy import with_kv_cache
+    from repro.serve.engine import PagedServeEngine, Request, ServeEngine
 
     name = "opt-proxy-s"
     cfg, model, params, _ = C.train_proxy(name, steps)
@@ -555,10 +564,13 @@ def serving_table(rep: C.Report, steps: int):
 
     from repro.models.serving_transforms import weight_bytes_summary
 
+    fixed_toks_w4 = pol_w4 = None
     for pol_name, ratio_bound in (("w4a8_abfp", 0.20),
                                   ("w4ffn_fp8attn", 0.50)):
         pol = preset(pol_name, n_layers=cfg.n_layers)
         _, sim_toks, sim_tps = run_engine(pol, compress=False)
+        if pol_name == "w4a8_abfp":
+            fixed_toks_w4, pol_w4 = sim_toks, pol
         eng_c, comp_toks, comp_tps = run_engine(pol, compress=True)
         wb = eng_c.weight_bytes
         match = comp_toks == sim_toks
@@ -580,6 +592,68 @@ def serving_table(rep: C.Report, steps: int):
                   f"ratio={wb['ratio']:.4f} "
                   f"({wb['compressed_sites']} compressed / "
                   f"{wb['dense_sites']} dense sites)")
+
+    # --- paged-KV engine: identity, offered-load sweep, KV residency -----
+    def run_paged(policy, reqs, kv="auto"):
+        eng = PagedServeEngine(model, params, n_slots=3, max_len=96,
+                               policy=policy, page_size=8,
+                               prefill_chunk=16, kv=kv)
+        for i, p in reqs:
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=8))
+        t0 = time.perf_counter()
+        toks = {c.uid: c.tokens for c in eng.run_until_done()}
+        dt = time.perf_counter() - t0
+        return eng, toks, sum(len(t) for t in toks.values()) / dt
+
+    eng_p, paged_toks, _ = run_paged(pol_w4, list(enumerate(prompts)))
+    ident = paged_toks == fixed_toks_w4
+    leak = eng_p.page_stats()["pages_in_use"]
+    rep.claim("serving_table",
+              f"{name}/w4a8_abfp: paged-KV engine emits the fixed-slot "
+              "engine's tokens and frees every page",
+              ident and leak == 0,
+              f"{sum(len(t) for t in paged_toks.values())} tokens, "
+              f"{leak} pages leaked")
+
+    # offered load: queue depth at admission, in requests (3 slots)
+    load_prompts = [
+        rng.randint(0, cfg.vocab, int(rng.randint(4, 12))).astype(np.int32)
+        for _ in range(12)
+    ]
+    for load in (3, 12):
+        eng_l, _, tps = run_paged(pol_w4, list(enumerate(
+            load_prompts[:load])))
+        st = eng_l.page_stats()
+        rep.row("serving_table", model=name, policy="w4a8_abfp",
+                paged=True, offered_load=load, tok_s=round(tps, 1),
+                pages_peak=st["pages_peak"],
+                pages_leaked=st["pages_in_use"])
+
+    # INT8 pages: capture occupancy MID-FLIGHT (the drained pool holds 0)
+    eng8 = PagedServeEngine(model, params, n_slots=3, max_len=96,
+                            policy=with_kv_cache(pol_w4, "int8"),
+                            page_size=8, prefill_chunk=16)
+    for i, p in enumerate(prompts):
+        eng8.submit(Request(uid=i, prompt=p, max_new_tokens=8))
+    for _ in range(3):
+        eng8.tick()
+    kvb = eng8.kv_bytes()
+    eng8.run_until_done()
+    rep.row("serving_table", model=name, policy="w4a8_abfp", paged=True,
+            kv="int8",
+            kv_resident_bytes=kvb["kv_resident_bytes"],
+            kv_code_bytes=kvb["kv_code_bytes"],
+            kv_scale_bytes=kvb["kv_scale_bytes"],
+            kv_fp16_equiv_bytes=kvb["kv_fp16_equiv_bytes"],
+            kv_vs_fp16_ratio=kvb["kv_vs_fp16_ratio"])
+    rep.claim("serving_table",
+              f"{name}: INT8 KV pages hold <= 0.5x the fp16-equivalent "
+              "resident bytes (codes; scales are metadata)",
+              kvb["kv_code_bytes"] > 0
+              and kvb["kv_code_bytes"] <= 0.5 * kvb["kv_fp16_equiv_bytes"],
+              f"codes={kvb['kv_code_bytes']} "
+              f"scales={kvb['kv_scale_bytes']} "
+              f"fp16_equiv={kvb['kv_fp16_equiv_bytes']}")
 
 
 # ------------------------------------------------- beyond-paper ablations

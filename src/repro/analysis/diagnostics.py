@@ -106,6 +106,12 @@ _register("QL303", Severity.WARNING, "estimated kernel VMEM footprint "
                                      "exceeds budget")
 _register("QL304", Severity.ERROR, "attention sequence does not tile by "
                                    "the attention blocks")
+_register("QL305", Severity.ERROR, "paged KV pool cannot admit a maximal "
+                                   "request")
+_register("QL306", Severity.ERROR, "prefill chunk does not tile by the KV "
+                                   "page size")
+_register("QL307", Severity.WARNING, "coarse KV pages waste reserved "
+                                     "capacity")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -105,6 +105,47 @@ def lint_kernels(cfg, policy: Policy, sites, *, compress: bool,
     return dd.out
 
 
+def lint_pages(geo) -> list:
+    """QL305-QL307 over a paged-serving geometry.
+
+    ``geo`` is a ``serve.kv_pages.PageGeometry`` (duck-typed: page_size /
+    n_pages / max_len / prefill_chunk / max_pages_per_seq).  The two error
+    codes mirror ``kv_pages.check_geometry`` word for word — the pre-flight
+    gate and the runtime constructor tell the same story; QL307 is the
+    advisory the runtime never raises (coarse pages are legal, just
+    wasteful: admission reserves whole pages, so up to ``page_size - 1``
+    tokens of the worst-case reservation are rounding).
+    """
+    from repro.analysis.diagnostics import Diagnostic
+
+    out = []
+    if geo.prefill_chunk % geo.page_size:
+        out.append(Diagnostic(
+            code="QL306", site="serve/pages",
+            message=msg.page_chunk_message(geo.prefill_chunk, geo.page_size),
+            hint="pick prefill_chunk as a multiple of page_size",
+        ))
+    if geo.n_pages < geo.max_pages_per_seq:
+        out.append(Diagnostic(
+            code="QL305", site="serve/pages",
+            message=msg.page_pool_message(
+                geo.n_pages, geo.max_pages_per_seq, geo.max_len,
+                geo.page_size),
+            hint="grow n_pages to at least pages_for(max_len, page_size) "
+                 "or lower max_len",
+        ))
+    if geo.max_len > 0 and geo.page_size > max(geo.max_len // 4, 1):
+        waste_pct = 100.0 * (geo.page_size - 1) / geo.max_len
+        out.append(Diagnostic(
+            code="QL307", site="serve/pages",
+            message=msg.page_waste_message(geo.page_size, geo.max_len,
+                                           waste_pct),
+            hint="shrink page_size (finer pages round-off less of the "
+                 "per-request reservation)",
+        ))
+    return out
+
+
 def _attention_diag(S: int, T: int, bq: int, bk: int):
     from repro.analysis.diagnostics import Diagnostic
 

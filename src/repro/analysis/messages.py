@@ -61,3 +61,42 @@ def vmem_message(site: str, est: int, bm: int, bn: int, bk: int) -> str:
         f"{est / 2**20:.1f} MiB (block_m={bm}, block_n={bn}, block_k={bk}) "
         f"vs the ~{VMEM_BUDGET_BYTES / 2**20:.0f} MiB/core budget"
     )
+
+
+def page_pool_message(n_pages: int, need: int, max_len: int,
+                      page_size: int) -> str:
+    """Paged-KV pool too small to ever admit a maximal request (the
+    admission loop would livelock on it; PagedServeEngine raises this at
+    construction and qlint flags it as QL305)."""
+    return (
+        f"paged KV pool of {n_pages} pages cannot admit a maximal request: "
+        f"max_len={max_len} at page_size={page_size} reserves {need} pages"
+    )
+
+
+def page_chunk_message(chunk: int, page_size: int) -> str:
+    """Chunked prefill must tile by the page size so each chunk's writes
+    land in whole pages (QL306 / PagedServeEngine constructor)."""
+    return (
+        f"prefill chunk {chunk} is not a multiple of the KV page size "
+        f"{page_size}; chunk writes must cover whole pages"
+    )
+
+
+def page_waste_message(page_size: int, max_len: int, waste_pct: float) -> str:
+    """Coarse pages waste reserved capacity (QL307, advisory)."""
+    return (
+        f"KV page size {page_size} is coarse for max_len={max_len}: "
+        f"worst-case reservation rounding wastes {waste_pct:.0f}% of a "
+        "sequence's pages"
+    )
+
+
+def flash_q_offset_message(S: int, T: int) -> str:
+    """Causal flash attention with S != T needs an explicit q_offset
+    (kernels.flash_attention raises this; the ref path defaults T - S)."""
+    return (
+        f"causal flash attention with S={S} != T={T} needs an explicit "
+        "q_offset (absolute position of the first query row); without it "
+        "the block mask would assume the queries start at position 0"
+    )

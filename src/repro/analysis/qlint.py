@@ -35,12 +35,15 @@ def site_universe(cfg) -> list:
 
 def lint(cfg, policy: Policy, recipe=None, *, shape=None,
          compress: bool = False, prequant: bool = False,
-         scan_layers: bool | None = None, model_name: str = "") -> Report:
+         scan_layers: bool | None = None, model_name: str = "",
+         pages=None) -> Report:
     """Statically analyze a full launch tuple; returns a ``Report``.
 
     ``scan_layers`` defaults to the config's own setting; launchers that
     auto-unroll for layer rules pass their *final* value so QL004 reflects
     what will actually run.  ``recipe`` is a QuantRecipe/name/None.
+    ``pages`` is a ``serve.kv_pages.PageGeometry`` when linting a paged
+    serving launch (QL305-QL307), else None.
     """
     ctx = {
         "arch": getattr(cfg, "name", "?"),
@@ -49,6 +52,7 @@ def lint(cfg, policy: Policy, recipe=None, *, shape=None,
         "shape": getattr(shape, "name", None),
         "compress": compress,
         "prequant": prequant,
+        "paged": pages is not None,
     }
     report = Report(context=ctx)
     mat_sites = enumerate_matmul_sites(cfg)
@@ -101,6 +105,8 @@ def lint(cfg, policy: Policy, recipe=None, *, shape=None,
     # --- QL3xx: kernel / launch ---------------------------------------------
     report.extend(kernel_lint.lint_kernels(
         cfg, policy, mat_sites, compress=compress, shape=shape))
+    if pages is not None:
+        report.extend(kernel_lint.lint_pages(pages))
     return report
 
 

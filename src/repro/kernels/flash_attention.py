@@ -26,13 +26,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.analysis.messages import attention_block_message
+from repro.analysis.messages import (attention_block_message,
+                                     flash_q_offset_message)
 
 NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale: float, causal: bool, bq: int, bk: int, k_steps: int):
+            scale: float, causal: bool, q_offset: int, bq: int, bk: int,
+            k_steps: int):
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -49,7 +51,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     ) * scale  # (bq, bk)
     if causal:
         qi = pl.program_id(1)
-        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        qpos = (q_offset + qi * bq
+                + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
         kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         s = jnp.where(kpos <= qpos, s, NEG_INF)
 
@@ -79,7 +82,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale", "causal", "block_q", "block_k", "interpret"),
+    static_argnames=("scale", "causal", "q_offset", "block_q", "block_k",
+                     "interpret"),
 )
 def flash_attention(
     q: jnp.ndarray,  # (BH, S, D)
@@ -87,13 +91,24 @@ def flash_attention(
     v: jnp.ndarray,  # (BH, T, D)
     scale: float | None = None,
     causal: bool = True,
+    q_offset: int | None = None,
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    """``q_offset`` is the absolute position of query row 0 in the KV
+    timeline: causal masking keeps ``kpos <= qpos + q_offset``.  For the
+    square self-attention case (S == T) it defaults to 0; a causal call
+    with S != T must pass it explicitly — there is no right implicit
+    choice, and silently assuming 0 would mask out the whole history for
+    a decode/chunked-prefill suffix of queries."""
     BH, S, D = q.shape
     _, T, _ = k.shape
     scale = D**-0.5 if scale is None else scale
+    if q_offset is None:
+        if causal and S != T:
+            raise ValueError(flash_q_offset_message(S, T))
+        q_offset = 0
     bq = min(block_q, S)
     bk = min(block_k, T)
     if S % bq or T % bk:
@@ -101,8 +116,8 @@ def flash_attention(
     k_steps = T // bk
     grid = (BH, S // bq, k_steps)
     return pl.pallas_call(
-        functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
-                          k_steps=k_steps),
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          q_offset=q_offset, bq=bq, bk=bk, k_steps=k_steps),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),

@@ -57,7 +57,9 @@ def abfp_qdq(x, fmt, n: int = 64, interpret: bool | None = None):
 
 
 def flash_attention_gqa(qh, kh, vh, scale: float | None = None,
-                        causal: bool = True, block_q: int = 128,
+                        causal: bool = True,
+                        q_offset: int | None = None,
+                        block_q: int = 128,
                         block_k: int = 128,
                         interpret: bool | None = None):
     """(B, S, H, D) GQA front-end for the fused flash kernel.
@@ -76,7 +78,7 @@ def flash_attention_gqa(qh, kh, vh, scale: float | None = None,
     k = jnp.repeat(kh.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, T, D)
     v = jnp.repeat(vh.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, T, D)
     o = flash_attention(q, k, v, scale=scale, causal=causal,
-                        block_q=block_q, block_k=block_k,
+                        q_offset=q_offset, block_q=block_q, block_k=block_k,
                         interpret=interpret)
     return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
 

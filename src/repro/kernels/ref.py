@@ -51,15 +51,25 @@ def abfp_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, fmt_x: Format,
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         scale: float | None = None,
-                        causal: bool = True) -> jnp.ndarray:
-    """Reference attention: materialized softmax(QK^T·scale)V, causal."""
+                        causal: bool = True,
+                        q_offset: int | None = None) -> jnp.ndarray:
+    """Reference attention: materialized softmax(QK^T·scale)V, causal.
+
+    ``q_offset`` is the absolute position of query row 0; under causal it
+    defaults to ``T - S`` (queries are the trailing suffix of the KV
+    timeline — the decode/chunked-prefill convention).  The Pallas kernel
+    refuses to guess and requires it explicitly when S != T.
+    """
     BH, S, D = q.shape
     T = k.shape[1]
     scale = D**-0.5 if scale is None else scale
     s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     if causal:
-        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        if q_offset is None:
+            q_offset = T - S
+        mask = (jnp.arange(T)[None, :]
+                <= jnp.arange(S)[:, None] + q_offset)
         s = jnp.where(mask[None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32))

@@ -25,18 +25,20 @@ import sys
 
 
 def preflight(cfg, policy, recipe=None, *, shape=None, compress=False,
-              prequant=False, scan_layers=None, where="launch",
+              prequant=False, scan_layers=None, pages=None, where="launch",
               out=sys.stderr) -> None:
     """Launcher gate: lint the tuple; SystemExit(2) on any error.
 
     Warnings and infos are printed to ``out`` and the launch proceeds.
     ``scan_layers`` should be the launcher's FINAL value (after its
     layer-rule unroll fallback) so QL004 reflects what will actually run.
+    ``pages`` carries the PageGeometry of a paged serving launch so the
+    gate runs QL305-QL307 before any device allocation.
     """
     from repro.analysis.qlint import lint
 
     report = lint(cfg, policy, recipe, shape=shape, compress=compress,
-                  prequant=prequant, scan_layers=scan_layers)
+                  prequant=prequant, scan_layers=scan_layers, pages=pages)
     if report.errors:
         print(f"qlint: {where} blocked by "
               f"{len(report.errors)} error(s):", file=out)

@@ -39,6 +39,19 @@ def main() -> int:
     ap.add_argument("--n-requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve with the paged-KV engine (block pool + "
+                    "chunked prefill) instead of fixed ring-buffer slots; "
+                    "reports page-pool and resident-KV-byte accounting")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--paged)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="physical pages in the shared pool (--paged; "
+                    "default sizes for full occupancy of every slot)")
+    ap.add_argument("--kv", default="auto",
+                    choices=("auto", "fp", "int8", "fp8"),
+                    help="page storage format (--paged); 'auto' follows "
+                    "the policy's kv_cache mode")
     ap.add_argument("--no-lint", action="store_true",
                     help="skip the qlint pre-flight gate")
     args = ap.parse_args()
@@ -47,7 +60,8 @@ def main() -> int:
     from repro.core.policy import preset
     from repro.models import build_model
     from repro.nn.module import unbox
-    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+    from repro.serve.kv_pages import PageGeometry, pages_for
 
     cfg = get_config(args.arch)
     if cfg.family == "vit":
@@ -74,12 +88,22 @@ def main() -> int:
     if rec is not None:
         # calibration observers need eager per-layer execution
         cfg = cfg.replace(scan_layers=False, remat="none")
+    pages_geo = None
+    if args.paged:
+        # mirror PagedServeEngine's defaults so the gate lints what runs
+        chunk = max(args.page_size, -(-64 // args.page_size) * args.page_size)
+        n_pages = (args.n_pages if args.n_pages is not None
+                   else args.n_slots * pages_for(args.max_len,
+                                                 args.page_size))
+        pages_geo = PageGeometry(page_size=args.page_size, n_pages=n_pages,
+                                 max_len=args.max_len, prefill_chunk=chunk)
     if not args.no_lint:
         # pre-flight gate: errors abort before any weights are built
         from repro.launch.lint import preflight
 
         preflight(cfg, policy, rec, compress=args.compress,
-                  scan_layers=cfg.scan_layers, where="serve")
+                  scan_layers=cfg.scan_layers, pages=pages_geo,
+                  where="serve")
     model = build_model(cfg)
     params = unbox(model.init(jax.random.PRNGKey(args.seed)))
     if rec is not None:
@@ -112,10 +136,18 @@ def main() -> int:
             print(f"note: recipe {rec.name!r} produced a static q tree; "
                   "serving ignores it (dynamic-max fallback)",
                   file=sys.stderr)
-    engine = ServeEngine(
-        model, params, n_slots=args.n_slots, max_len=args.max_len,
-        policy=policy, compress=args.compress,
-    )
+    if args.paged:
+        engine = PagedServeEngine(
+            model, params, n_slots=args.n_slots, max_len=args.max_len,
+            policy=policy, compress=args.compress,
+            page_size=pages_geo.page_size, n_pages=pages_geo.n_pages,
+            prefill_chunk=pages_geo.prefill_chunk, kv=args.kv,
+        )
+    else:
+        engine = ServeEngine(
+            model, params, n_slots=args.n_slots, max_len=args.max_len,
+            policy=policy, compress=args.compress,
+        )
     compress_info = {}
     if args.compress:
         from repro.models.serving_transforms import weight_bytes_summary
@@ -142,6 +174,20 @@ def main() -> int:
     done = engine.run_until_done()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(c.tokens) for c in done)
+    paged_info = {}
+    if args.paged:
+        stats = engine.page_stats()
+        # capacity quoted per fully-occupied page, not the drained pool
+        cap = engine.kv_bytes()
+        paged_info = {
+            "paged": True,
+            "kv": engine.kv,
+            "page_size": engine.geometry.page_size,
+            "prefill_chunk": engine.geometry.prefill_chunk,
+            **stats,
+        }
+        if stats["pages_in_use"]:
+            paged_info.update(cap)
     print(
         json.dumps(
             {
@@ -154,6 +200,7 @@ def main() -> int:
                 "tokens_per_s": round(total_tokens / dt, 1),
                 **recipe_info,
                 **compress_info,
+                **paged_info,
             }
         )
     )

@@ -29,7 +29,7 @@ from repro.core.policy import (
     kv_cache_mode,
 )
 from repro.dist import sharding as shd
-from repro.nn.attention import Attention, KVCache
+from repro.nn.attention import Attention, KVCache, PagedKVCache
 from repro.nn.ffn import MLP
 from repro.nn.linear import Dense, Embed
 from repro.nn.moe import MoE
@@ -41,12 +41,32 @@ GLOBAL_WINDOW = 1 << 30
 NEG_INF = -1e9
 
 
+class PagedState(NamedTuple):
+    """Paged KV serving state: the shared page pool + the page table.
+
+    ``cache``: PagedKVCache leaves stacked with a leading L dim — one
+    physical pool per layer, indexed by the SAME page table (a page index
+    addresses the same slot in every layer's store).
+    ``table``: (B, max_pages_per_seq) int32 physical page per logical
+    page, -1 where unmapped; owned/updated host-side by the engine's
+    admission control, read by every jitted paged step.
+    """
+
+    cache: Any  # PagedKVCache with leading L dim
+    table: jnp.ndarray  # (B, n_logical) int32
+
+
 class DecodeState(NamedTuple):
-    """Stacked per-layer caches + absolute position."""
+    """Stacked per-layer caches + absolute position.
+
+    Exactly one of kv / ssm / pages is populated: the fixed-slot ring
+    buffer, the SSM state, or the paged KV pool (continuous batching).
+    """
 
     kv: Any  # KVCache with leading L dim, or None
     ssm: Any  # SSMCache with leading L dim, or None
-    position: jnp.ndarray  # scalar int32
+    position: jnp.ndarray  # scalar int32 (aligned) or (B,) per-slot
+    pages: Any = None  # PagedState, or None
 
 
 def _norm(cfg: ArchConfig):
@@ -315,16 +335,32 @@ class TransformerLM:
 
     # -------------------------------------------------------------- prefill
     def prefill(self, params, tokens, *, policy=QuantPolicy(),
-                max_len: int | None = None, prefix_embeds=None):
+                max_len: int | None = None, prefix_embeds=None,
+                n_valid=None):
         """Forward pass that also builds decode caches.
 
         Returns (last-position logits (B, vocab_padded), DecodeState).
+
+        ``n_valid`` ((B,) int32) supports bucketed prefill: ``tokens`` is
+        right-padded to a bucket length, K/V cache rows past each row's
+        valid length are zeroed (see ``Attention.apply``) and the logits
+        are taken at position ``n_valid - 1`` instead of the last column —
+        token-identical to an exact-length prefill, at a bounded number of
+        compile shapes.  Attention-family models only: SSM state is
+        recurrent over the padded tail, so bucketing would corrupt it.
         """
         c = self.cfg
         check_scan_compatible(policy, c.scan_layers, c.name)
         kv_cache_mode(policy)  # cache storage is engine-global: reject
         # maps whose rules disagree on it with a clear error here, not a
         # pytree-mismatch crash when the per-layer caches get stacked
+        if n_valid is not None:
+            if self.is_ssm:
+                raise ValueError(
+                    "bucketed prefill (n_valid) is attention-family only: "
+                    "SSM recurrence integrates the padded tail into the "
+                    "state; prefill SSM models at exact length")
+            n_valid = jnp.asarray(n_valid, jnp.int32)
         x, positions = self._embed_in(params, tokens, prefix_embeds)
         B, S = x.shape[0], x.shape[1]
         max_len = max_len or S
@@ -361,7 +397,7 @@ class TransformerLM:
                 h = _norm(c).apply(bp["ln1"], xc)
                 h, (kf, vf) = attn_l.apply(
                     bp["attn"], h, positions=positions, policy=policy,
-                    window=w, return_kv=True,
+                    window=w, return_kv=True, n_valid=n_valid,
                 )
                 cache = attn_l.fill_cache(kf, vf, cache_size, policy=policy)
                 if c.post_norms:
@@ -386,10 +422,16 @@ class TransformerLM:
                                  name=f"blocks.{i}")
                     caches.append(cc)
                 kv = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *caches)
-            state = DecodeState(kv=kv, ssm=None,
-                                position=jnp.asarray(S, jnp.int32))
+            pos = jnp.asarray(S, jnp.int32) if n_valid is None else n_valid
+            state = DecodeState(kv=kv, ssm=None, position=pos)
 
-        x = _norm(c).apply(params["final_norm"], x[:, -1:, :])
+        if n_valid is None:
+            x = x[:, -1:, :]
+        else:  # last VALID position per row, not the padded column
+            sel = jnp.maximum(n_valid - 1, 0)[:, None, None]
+            x = jnp.take_along_axis(x, jnp.broadcast_to(
+                sel, (B, 1, x.shape[-1])), axis=1)
+        x = _norm(c).apply(params["final_norm"], x)
         logits = self.head_logits(params, x, policy)
         return logits[:, 0], state
 
@@ -489,6 +531,109 @@ class TransformerLM:
 
         x = _norm(c).apply(params["final_norm"], x)
         logits = self.head_logits(params, x, policy)
+        return logits[:, 0], new_state
+
+    # ---------------------------------------------------------- paged decode
+    def init_paged_state(self, batch: int, *, page_size: int, n_pages: int,
+                         max_pages_per_seq: int,
+                         kv: str = "fp") -> DecodeState:
+        """Paged serving state: one physical page pool per layer plus the
+        per-slot page table (all -1 = nothing mapped), per-row positions.
+
+        ``kv``: page storage — 'fp' (native dtype), 'int8' or 'fp8' codes
+        with per-(page, head) scales.  Attention-family models only.
+        """
+        c = self.cfg
+        if self.is_ssm:
+            raise TypeError(
+                "paged KV serving is attention-family only; SSM state is "
+                f"O(1) per sequence and needs no pages ({c.name})")
+        L = c.n_layers
+        one = self._attention().init_paged_cache(n_pages, page_size,
+                                                 dtype=c.dtype, kv=kv)
+        cache = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), one
+        )
+        table = jnp.full((batch, max_pages_per_seq), -1, jnp.int32)
+        return DecodeState(
+            kv=None, ssm=None,
+            position=jnp.zeros((batch,), jnp.int32),
+            pages=PagedState(cache=cache, table=table),
+        )
+
+    def paged_step(self, params, tokens, state: DecodeState, *,
+                   n_valid, policy=QuantPolicy(), q=None):
+        """One paged serving step over a (B, S) token chunk.
+
+        S = 1 is a decode tick over every slot; S = chunk is one chunked-
+        prefill tile for a prefilling slot (other rows masked with
+        ``n_valid = 0``).  Writes the chunk's K/V into the pages mapped by
+        ``state.pages.table``, attends over each row's gathered pages and
+        returns (logits at each row's last valid token, new state) with
+        ``position`` advanced by ``n_valid``.
+        """
+        c = self.cfg
+        check_scan_compatible(policy, c.scan_layers, c.name)
+        if state.pages is None:
+            raise TypeError("paged_step needs a DecodeState from "
+                            "init_paged_state (state.pages is None)")
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        pos = jnp.asarray(state.position, jnp.int32)
+        table = state.pages.table
+        x, _ = self._embed_in(params, tokens, pos_offset=pos)
+        B, S = tokens.shape[0], tokens.shape[1]
+        windows = self.layer_windows(0)
+
+        def body(xc, xs, name="block"):
+            bp, cache, w = xs
+            h = _norm(c).apply(bp["ln1"], xc)
+            attn = self._attention(f"{name}/attn")
+            h, cache = attn.paged_step(
+                bp["attn"], h, cache, page_table=table, position=pos,
+                n_valid=n_valid, policy=policy, window=w,
+            )
+            if c.post_norms:
+                h = _norm(c).apply(bp["ln1_post"], h)
+            xc = xc + h
+            h = _norm(c).apply(bp["ln2"], xc)
+            if self.is_moe:
+                h, _ = self._moe(f"{name}/ffn").apply(bp["ffn"], h, policy)
+            else:
+                h = self._mlp(f"{name}/ffn").apply(bp["ffn"], h, policy)
+            if c.post_norms:
+                h = _norm(c).apply(bp["ln2_post"], h)
+            return xc + h, cache
+
+        if c.scan_layers:
+            def scan_body(xc, xs):
+                bp, cache, w = xs
+                return body(xc, (bp, cache, w))
+            x, new_cache = jax.lax.scan(
+                scan_body, x,
+                (params["blocks"], state.pages.cache, windows))
+        else:
+            caches = []
+            wl = self.layer_windows_py()
+            for i, bp in enumerate(params["blocks"]):
+                ci = jax.tree_util.tree_map(
+                    lambda a, i=i: a[i], state.pages.cache)
+                ci = PagedKVCache(*ci)
+                x, cnew = body(
+                    x, (bp, ci, jnp.asarray(int(wl[i]), jnp.int32)),
+                    name=f"blocks.{i}")
+                caches.append(cnew)
+            new_cache = jax.tree_util.tree_map(lambda *a: jnp.stack(a),
+                                               *caches)
+
+        sel = jnp.maximum(n_valid - 1, 0)[:, None, None]
+        x = jnp.take_along_axis(
+            x, jnp.broadcast_to(sel, (B, 1, x.shape[-1])), axis=1)
+        x = _norm(c).apply(params["final_norm"], x)
+        logits = self.head_logits(params, x, policy)
+        new_state = DecodeState(
+            kv=None, ssm=None, position=pos + n_valid,
+            pages=PagedState(cache=new_cache, table=table),
+        )
         return logits[:, 0], new_state
 
 

@@ -77,12 +77,14 @@ class Model:
         return ce + 0.01 * aux, {"ce": ce, "aux": aux}
 
     def prefill(self, params, batch, policy=QuantPolicy(),
-                max_len: int | None = None):
+                max_len: int | None = None, n_valid=None):
         tokens, kw = self._split_batch(batch)
+        if n_valid is not None:  # bucketed prefill (TransformerLM family)
+            kw["n_valid"] = n_valid
         if self.cfg.family == "vlm":
             return self.inner.prefill(
                 params, tokens, policy=policy, max_len=max_len,
-                prefix_embeds=kw["prefix_embeds"])
+                prefix_embeds=kw.pop("prefix_embeds", None), **kw)
         return self.inner.prefill(params, tokens, policy=policy,
                                   max_len=max_len, **kw)
 
@@ -91,6 +93,15 @@ class Model:
 
     def init_decode_state(self, batch: int, max_len: int, **kw):
         return self.inner.init_decode_state(batch, max_len, **kw)
+
+    def init_paged_state(self, batch: int, **kw):
+        """Paged-KV serving state (TransformerLM family only)."""
+        return self.inner.init_paged_state(batch, **kw)
+
+    def paged_step(self, params, tokens, state, *, n_valid,
+                   policy=QuantPolicy()):
+        return self.inner.paged_step(params, tokens, state,
+                                     n_valid=n_valid, policy=policy)
 
 
 def build_model(cfg: ArchConfig):

@@ -55,6 +55,54 @@ class KVCache(NamedTuple):
     v_scale: jnp.ndarray | None = None
 
 
+class PagedKVCache(NamedTuple):
+    """One layer's paged KV store: a shared pool of fixed-size pages.
+
+    k/v: (n_pages + 1, page_size, n_kv * head_dim) — physical pages shared
+    by every slot of the serving batch; which pages belong to which
+    sequence lives in the engine's per-slot page table (threaded through
+    ``DecodeState.pages``), not here.  The LAST physical page is the trash
+    page: masked/padded writes are routed to it so the jitted scatter
+    stays fixed-shape (it is never gathered unmasked).
+
+    Quantized storage (policy.kv_cache 'int8' / 'fp8'): k/v hold codes and
+    k_scale/v_scale hold per-(page, kv_head) f32 unit scales — one scale
+    amortized over the whole page (coarser than the ring buffer's
+    per-token scales; the capacity win is the point).  Decode writes into
+    a partially-filled page monotonically raise its scale and requantize
+    the resident codes (documented drift, bounded by the page's dynamic
+    range ratio)."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    k_scale: jnp.ndarray | None = None  # (n_pages + 1, n_kv) f32
+    v_scale: jnp.ndarray | None = None
+
+
+FP8_KV_MAX = 448.0  # float8_e4m3fn finite max (the paper's serving format)
+_KV_EPS = 1e-12
+
+
+def paged_kv_mode(cache: PagedKVCache) -> str:
+    """Storage mode from the store itself: 'fp' | 'int8' | 'fp8'."""
+    if cache.k_scale is None:
+        return "fp"
+    return "int8" if cache.k.dtype == jnp.int8 else "fp8"
+
+
+def _page_encode(x4: jnp.ndarray, scale: jnp.ndarray, mode: str):
+    """Values (..., n_kv, D) + per-(..., n_kv) unit scales -> stored codes."""
+    y = x4.astype(jnp.float32) / scale[..., None]
+    if mode == "int8":
+        return jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return y.astype(jnp.float8_e4m3fn)
+
+
+def _page_unit_scale(alpha: jnp.ndarray, mode: str) -> jnp.ndarray:
+    qmax = 127.0 if mode == "int8" else FP8_KV_MAX
+    return jnp.maximum(alpha.astype(jnp.float32), _KV_EPS) / qmax
+
+
 def _kv_quantize(x4: jnp.ndarray):
     """(…, n_kv, D) -> int8 codes (flat) + per-(…, head) unit scales."""
     alpha = jnp.max(jnp.abs(x4), axis=-1)  # (..., n_kv)
@@ -299,16 +347,31 @@ class Attention:
         q: dict | None = None,
         kv_override: tuple | None = None,  # (k, v, kv_positions) for cross
         return_kv: bool = False,
+        n_valid: jnp.ndarray | None = None,  # (B,) valid prefix lengths
     ) -> jnp.ndarray:
         """Full-sequence attention (training / prefill).
 
         ``policy`` may be a PolicyMap: block-level decisions (BMM quant,
         flash eligibility, KV handling) resolve at ``self.name`` while the
         q/k/v/o projections resolve at their own sub-sites inside qmatmul.
+
+        ``n_valid``: bucketed prefill pads prompts to the bucket length;
+        K/V rows at or past each row's valid length are zeroed so (a) the
+        returned ``return_kv`` tensors fill the cache exactly as an
+        exact-length prefill would, and (b) requant/on_write QDQ group
+        maxima over the seq axis see zeros — not pad-token projections —
+        keeping padded prefill token-identical to unpadded (ABFP zero-pads
+        partial groups the same way).  Causality already hides the pad
+        rows from valid queries; this hides them from the quantizers.
         """
         pol = resolve_policy(policy, self.name)
         B, S, _ = x.shape
         qh, kh, vh = self._project_qkv(params, x, positions, policy, q)
+        if n_valid is not None:
+            keep = (jnp.arange(S, dtype=jnp.int32)[None, :]
+                    < n_valid[:, None])[..., None, None]
+            kh = kh * keep.astype(kh.dtype)
+            vh = vh * keep.astype(vh.dtype)
         kv_pos = positions
         if kv_override is not None:
             kh, vh, kv_pos = kv_override
@@ -334,6 +397,7 @@ class Attention:
             out = kops.flash_attention_gqa(
                 qh, kh, vh, scale=self._scale(), causal=self.causal,
                 block_q=min(self.q_block, S), block_k=min(self.kv_block, T),
+                q_offset=0,  # full-sequence self-attention: q starts at 0
             )
         else:
             fn = self._blockwise if use_block else self._reference
@@ -529,5 +593,204 @@ class Attention:
             name=f"{self.name}/o",
         )
         y = o_dense.apply(params["o"], out.reshape(B, 1, -1), policy,
+                          q=None if q is None else q.get("o"))
+        return shd.constrain(y, ("batch", "seq_res", "embed")), cache
+
+    # ------------------------------------------------------- paged decoding
+    def init_paged_cache(self, n_pages: int, page_size: int, dtype=None,
+                         kv: str = "fp") -> PagedKVCache:
+        """One layer's shared page pool (+1 trash page for masked writes).
+
+        ``kv``: 'fp' (native dtype), 'int8', or 'fp8' (e4m3 codes); the
+        quantized modes add per-(page, head) f32 scales."""
+        flat = self.n_kv * self.head_dim
+        P = n_pages + 1  # physical pages incl. the trash page
+        if kv in ("int8", "fp8"):
+            ct = jnp.int8 if kv == "int8" else jnp.float8_e4m3fn
+            # zero scales: an unwritten page dequantizes to exactly 0
+            return PagedKVCache(
+                k=jnp.zeros((P, page_size, flat), ct),
+                v=jnp.zeros((P, page_size, flat), ct),
+                k_scale=jnp.zeros((P, self.n_kv), jnp.float32),
+                v_scale=jnp.zeros((P, self.n_kv), jnp.float32),
+            )
+        if kv != "fp":
+            raise ValueError(f"unknown paged KV storage mode {kv!r} "
+                             "(expected 'fp', 'int8' or 'fp8')")
+        dt = jnp.dtype(dtype or self.dtype)
+        return PagedKVCache(
+            k=jnp.zeros((P, page_size, flat), dt),
+            v=jnp.zeros((P, page_size, flat), dt),
+        )
+
+    def _page_write(self, cache: PagedKVCache, kh, vh, phys_tok, positions,
+                    mode: str) -> PagedKVCache:
+        """Scatter S new tokens per row into the page pool.
+
+        kh/vh: (B, S, n_kv, D) with invalid rows already zeroed.
+        ``phys_tok``: (B, S) physical page per token (masked writes
+        already routed to the trash page).  Two static shapes:
+
+          * S == 1 (decode): single-token write; quantized modes gather the
+            resident page, monotonically raise its per-(page, head) scale
+            and requantize the old codes against it (drift bounded by the
+            scale ratio — the documented paged-KV deviation).
+          * S == m * page_size with page-aligned positions (prefill
+            chunks): whole-page writes; the page scale is the exact max
+            over the page's (masked) tokens, so prefilled pages carry no
+            requantization drift at all.
+        """
+        B, S, KV, D = kh.shape
+        ps = cache.k.shape[1]
+        F = KV * D
+        if mode == "fp":
+            slot = positions % ps
+            new_k = cache.k.at[phys_tok, slot].set(
+                kh.reshape(B, S, F).astype(cache.k.dtype))
+            new_v = cache.v.at[phys_tok, slot].set(
+                vh.reshape(B, S, F).astype(cache.v.dtype))
+            return PagedKVCache(k=new_k, v=new_v)
+        if S == 1:
+            phys = phys_tok[:, 0]  # (B,)
+            slot = (positions[:, 0] % ps)  # (B,)
+            rows = jnp.arange(B)
+
+            def upd(store, scale, x4):
+                old = store[phys].reshape(B, ps, KV, D)  # codes
+                s_old = scale[phys]  # (B, n_kv)
+                alpha = jnp.max(jnp.abs(x4[:, 0]), axis=-1)  # (B, n_kv)
+                s_new = jnp.maximum(s_old, _page_unit_scale(alpha, mode))
+                ratio = s_old / s_new  # <= 1; 0 for untouched pages
+                old_f = old.astype(jnp.float32) * ratio[:, None, :, None]
+                if mode == "int8":
+                    old_rq = jnp.clip(jnp.round(old_f), -127, 127)
+                else:
+                    old_rq = old_f
+                page = old_rq.at[rows, slot].set(
+                    x4[:, 0].astype(jnp.float32) / s_new[..., None])
+                if mode == "int8":
+                    page = jnp.clip(jnp.round(page), -127, 127)
+                page = page.astype(store.dtype).reshape(B, ps, F)
+                return store.at[phys].set(page), scale.at[phys].set(s_new)
+
+            new_k, new_ks = upd(cache.k, cache.k_scale, kh)
+            new_v, new_vs = upd(cache.v, cache.v_scale, vh)
+            return PagedKVCache(k=new_k, v=new_v, k_scale=new_ks,
+                                v_scale=new_vs)
+        if S % ps:
+            from repro.analysis.messages import page_chunk_message
+
+            raise ValueError(page_chunk_message(S, ps))
+        m = S // ps
+        phys_pg = phys_tok.reshape(B, m, ps)[:, :, 0]  # (B, m)
+
+        def enc(x4):
+            xg = x4.reshape(B, m, ps, KV, D)
+            alpha = jnp.max(jnp.abs(xg), axis=(2, 4))  # (B, m, n_kv)
+            s = _page_unit_scale(alpha, mode)
+            codes = _page_encode(xg, s[:, :, None], mode)
+            return codes.reshape(B, m, ps, F), s
+
+        kc, ks = enc(kh)
+        vc, vs = enc(vh)
+        return PagedKVCache(
+            k=cache.k.at[phys_pg].set(kc),
+            v=cache.v.at[phys_pg].set(vc),
+            k_scale=cache.k_scale.at[phys_pg].set(ks),
+            v_scale=cache.v_scale.at[phys_pg].set(vs),
+        )
+
+    def paged_step(
+        self,
+        params: dict,
+        x: jnp.ndarray,  # (B, S, d_model): S=1 decode, S=chunk prefill
+        cache: PagedKVCache,
+        *,
+        page_table: jnp.ndarray,  # (B, n_logical) physical indices, -1 free
+        position: jnp.ndarray,  # (B,) absolute position of x[:, 0]
+        n_valid: jnp.ndarray,  # (B,) valid tokens in x (0 masks the row)
+        policy: Policy,
+        window=None,
+        q: dict | None = None,
+    ) -> tuple[jnp.ndarray, PagedKVCache]:
+        """Unified paged write-then-attend over a token chunk.
+
+        Projects S tokens, writes their K/V into the row's pages (invalid
+        tokens — pad rows past ``n_valid`` or rows with no page mapped —
+        go to the trash page), then gathers the row's full page list,
+        rescales quantized pages, zero-masks unwritten positions and runs
+        the reference attention with absolute positions.  Exactness notes:
+        gathered-length T = n_logical * page_size differs from the fixed
+        engine's max_len, but masked positions are exact zeros and ABFP
+        seq-axis groups align from index 0, so requant QDQ over the gather
+        matches the ring-buffer path bit-for-bit (the token-identity claim
+        ``serving_table`` makes).
+        """
+        pol = resolve_policy(policy, self.name)
+        mode = paged_kv_mode(cache)
+        B, S, _ = x.shape
+        NL = page_table.shape[1]
+        ps = cache.k.shape[1]
+        trash = cache.k.shape[0] - 1
+        position = jnp.asarray(position, jnp.int32)
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        positions = position[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+        qh, kh, vh = self._project_qkv(params, x, positions, policy, q)
+        keep = (jnp.arange(S, dtype=jnp.int32)[None] < n_valid[:, None])
+        kh = kh * keep[..., None, None].astype(kh.dtype)
+        vh = vh * keep[..., None, None].astype(vh.dtype)
+        kv_on_write = (mode == "fp" and pol.enabled and pol.attn_bmm
+                       and pol.input is not None
+                       and pol.kv_cache == "on_write")
+        if kv_on_write:
+            # quantize ONCE at write time (per-token, as decode_step does)
+            kh = qdq_activation(kh, pol.input, axis=-1,
+                                site=self.name + "/bmm_k")
+            vh = qdq_activation(vh, pol.input, axis=-1,
+                                site=self.name + "/bmm_v")
+
+        # physical page per token; every masked write routes to the trash
+        lp = jnp.clip(positions // ps, 0, NL - 1)  # (B, S) logical pages
+        phys_tok = jnp.take_along_axis(page_table, lp, axis=1)
+        ok = keep & (phys_tok >= 0) & (positions // ps < NL)
+        phys_tok = jnp.where(ok, phys_tok, trash)
+        cache = self._page_write(cache, kh, vh, phys_tok, positions, mode)
+
+        # gather the row's pages in logical order -> contiguous (B, T, ...)
+        T = NL * ps
+        phys_tab = jnp.where(page_table >= 0, page_table, trash)  # (B, NL)
+        gk = cache.k[phys_tab]  # (B, NL, ps, F)
+        gv = cache.v[phys_tab]
+        if mode != "fp":
+            sk = cache.k_scale[phys_tab][:, :, None, :, None]  # (B,NL,1,KV,1)
+            sv = cache.v_scale[phys_tab][:, :, None, :, None]
+            gk = gk.reshape(B, NL, ps, self.n_kv, self.head_dim)
+            gv = gv.reshape(B, NL, ps, self.n_kv, self.head_dim)
+            gk = (gk.astype(jnp.float32) * sk).astype(jnp.dtype(self.dtype))
+            gv = (gv.astype(jnp.float32) * sv).astype(jnp.dtype(self.dtype))
+        gk = gk.reshape(B, T, self.n_kv, self.head_dim)
+        gv = gv.reshape(B, T, self.n_kv, self.head_dim)
+
+        idx = jnp.arange(T, dtype=jnp.int32)[None]  # (1, T) absolute pos
+        mapped = jnp.take_along_axis(
+            page_table, jnp.broadcast_to(idx // ps, (B, T)), axis=1) >= 0
+        n_ctx = position + n_valid  # tokens visible after this write
+        valid = (idx < n_ctx[:, None]) & mapped
+        kv_pos = jnp.where(valid, idx, -1)
+        # zero-mask: requant group maxima must see zeros, never trash data
+        gk = gk * valid[..., None, None].astype(gk.dtype)
+        gv = gv * valid[..., None, None].astype(gv.dtype)
+
+        if window is None:
+            window = jnp.asarray(T + 1, jnp.int32)
+        out = self._reference(qh, gk, gv, positions, kv_pos, window, policy,
+                              q=q, kv_prequant=kv_on_write or mode != "fp")
+        o_dense = Dense(
+            self.n_heads * self.head_dim, self.d_model,
+            in_axis="qkv", out_axis="embed",
+            param_dtype=self.param_dtype, dtype=self.dtype,
+            name=f"{self.name}/o",
+        )
+        y = o_dense.apply(params["o"], out.reshape(B, S, -1), policy,
                           q=None if q is None else q.get("o"))
         return shd.constrain(y, ("batch", "seq_res", "embed")), cache

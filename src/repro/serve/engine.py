@@ -1,16 +1,32 @@
-"""Continuous-batching serving engine (vLLM-style slots, JAX-native).
+"""Continuous-batching serving engines (JAX-native, fixed jit shapes).
 
-Fixed-shape design — the jitted decode step never recompiles:
-  * ``n_slots`` concurrent sequences share one batched DecodeState whose
-    ``position`` is a per-slot (B,) vector (the attention decode path takes
-    scalar OR vector positions; vector triggers the batched-scatter cache
-    update).
-  * prefill runs per-request (batch 1, bucketed by padded prompt length so
-    at most a few compilations) and the resulting caches are scattered into
-    the slot's rows with one dynamic_update_slice per leaf;
-  * every engine tick = one decode step over all slots (idle slots compute
-    garbage — the fixed-shape tax every TPU serving stack pays) + host-side
-    bookkeeping (EOS / max-token eviction, admission).
+Two engines share the queue / completion machinery:
+
+``ServeEngine`` — fixed-slot ring-buffer KV.  ``n_slots`` sequences share
+one batched DecodeState sized ``(n_slots, max_len)``; prefill runs per
+request at a *bucketed* length (prompts are right-padded to the next
+multiple of ``prefill_bucket`` and masked via ``n_valid``, so the compile
+cache holds at most ``max_len / prefill_bucket`` prefill programs instead
+of one per distinct prompt length) and the resulting batch-1 cache is
+scattered into the slot's rows.  Every tick is one batched decode step;
+idle slots compute garbage — the fixed-shape tax.
+
+``PagedServeEngine`` — vLLM-style paged KV (``serve.kv_pages``).  All
+slots share one physical page pool per layer; a host-side ``PagePool``
+hands out fixed-size pages at admission (the worst case
+``pages_for(prompt + max_new_tokens)`` is reserved up front, so decode
+never deadlocks mid-sequence) and a per-slot page table maps logical to
+physical pages.  Prefill is *chunked* through the same jitted
+``paged_step`` the decode tick uses — one ``prefill_chunk`` tile per
+prefilling slot per tick, interleaved with decode — so exactly two
+program shapes exist: ``(n_slots, prefill_chunk)`` and ``(n_slots, 1)``.
+Pages can store fp, INT8 or FP8 codes with per-(page, head) scales;
+``kv="auto"`` follows the policy's ``kv_cache`` mode.
+
+Both engines are token-identical to a straight prefill-then-decode of the
+same request (masked rows are zeroed *before* any seq-axis requant, so
+bucketing/paging never perturbs quantizer group maxima — see
+``nn.attention``).
 
 Quantized serving: pass a policy; weights/activations get ABFP QDQ inside
 prefill/decode exactly as in training (the paper's inference story).
@@ -33,6 +49,8 @@ import numpy as np
 
 from repro.core.policy import Policy, QuantPolicy, kv_cache_mode
 from repro.models.lm import DecodeState
+from repro.serve.kv_pages import (PageGeometry, PagePool, check_geometry,
+                                  pages_for, resident_kv_bytes)
 
 
 @dataclasses.dataclass
@@ -51,7 +69,93 @@ class Completion:
     finished_reason: str  # 'eos' | 'length'
 
 
-class ServeEngine:
+class TickBudgetExhausted(RuntimeError):
+    """``run_until_done`` ran out of ticks with work still in flight.
+
+    Silently returning the partial ``done`` list (the old behavior) made a
+    too-small budget look like a short workload; now the partial results
+    travel on the exception instead: ``completions`` holds what finished,
+    ``unfinished`` the uids still queued or resident in a slot.
+    """
+
+    def __init__(self, max_ticks: int, completions: list, unfinished: list):
+        self.max_ticks = max_ticks
+        self.completions = completions
+        self.unfinished = unfinished
+        super().__init__(
+            f"tick budget of {max_ticks} exhausted with "
+            f"{len(unfinished)} request(s) unfinished (uids {unfinished}); "
+            "finished completions are on .completions"
+        )
+
+
+class _EngineBase:
+    """Queue / completion bookkeeping shared by both engines."""
+
+    model: object
+    params: object
+    policy: Policy
+    n_slots: int
+    max_len: int
+
+    def _init_common(self, n_slots: int):
+        self.req: list[Request | None] = [None] * n_slots
+        self.generated: list[list[int]] = [[] for _ in range(n_slots)]
+        self.queue: list[Request] = []
+        self.done: list[Completion] = []
+        self.ticks = 0
+
+    def submit(self, req: Request):
+        need = len(req.prompt) + req.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request exceeds engine max_len: prompt of "
+                f"{len(req.prompt)} tokens + max_new_tokens="
+                f"{req.max_new_tokens} needs {need} > max_len={self.max_len}"
+            )
+        self.queue.append(req)
+
+    def _complete(self, slot: int, reason: str):
+        req = self.req[slot]
+        self.done.append(
+            Completion(
+                uid=req.uid,
+                tokens=list(self.generated[slot]),
+                prompt_len=len(req.prompt),
+                finished_reason=reason,
+            )
+        )
+        self.req[slot] = None
+        self.generated[slot] = []
+
+    def _has_work(self) -> bool:
+        raise NotImplementedError
+
+    def _resident_uids(self) -> list[int]:
+        return [r.uid for r in self.req if r is not None]
+
+    def tick(self):
+        raise NotImplementedError
+
+    def run_until_done(self, max_ticks: int = 10_000) -> list[Completion]:
+        """Drive ticks until the queue and slots drain.
+
+        Raises ``TickBudgetExhausted`` (with the partial completions
+        attached) if work remains after ``max_ticks`` ticks — a truncated
+        run must never be mistaken for a finished one.
+        """
+        spent = 0
+        while self._has_work():
+            if spent >= max_ticks:
+                raise TickBudgetExhausted(
+                    max_ticks, list(self.done),
+                    self._resident_uids() + [r.uid for r in self.queue])
+            self.tick()
+            spent += 1
+        return self.done
+
+
+class ServeEngine(_EngineBase):
     """Slot-based continuous batching over a TransformerLM-family model."""
 
     BATCH_AXIS = 1  # stacked-layer caches: (L, B, ...)
@@ -68,8 +172,12 @@ class ServeEngine:
         compress: bool = False,
     ):
         self.model = model
-        kv_cache_mode(policy)  # engine-global cache storage: fail fast on
-        # maps whose rules disagree on kv_cache
+        mode = kv_cache_mode(policy)  # engine-global cache storage: fail
+        # fast on maps whose rules disagree on kv_cache
+        if mode == "fp8":
+            raise ValueError(
+                "kv_cache='fp8' is paged-only (the ring-buffer cache has no "
+                "fp8 storage); serve this policy with PagedServeEngine")
         self.weight_bytes = None
         if compress:
             from repro.models import serving_transforms as st
@@ -84,24 +192,22 @@ class ServeEngine:
         self.max_len = max_len
         self.prefill_bucket = prefill_bucket
 
-        state = model.init_decode_state(n_slots, max_len)
+        state = model.init_decode_state(n_slots, max_len,
+                                        kv_quant=(mode == "int8"))
         if not isinstance(state, DecodeState):
             raise TypeError(
                 "ServeEngine drives TransformerLM-family models; got "
                 f"{type(state).__name__} from "
                 f"{type(model).__name__}.init_decode_state"
             )
+        self._is_ssm = state.ssm is not None
         self.state = state._replace(
             position=jnp.zeros((n_slots,), jnp.int32)
         )
         self.cur_token = jnp.zeros((n_slots, 1), jnp.int32)
         # host bookkeeping
         self.active = np.zeros(n_slots, dtype=bool)
-        self.req: list[Request | None] = [None] * n_slots
-        self.generated: list[list[int]] = [[] for _ in range(n_slots)]
-        self.queue: list[Request] = []
-        self.done: list[Completion] = []
-        self.ticks = 0
+        self._init_common(n_slots)
 
         self._decode = jax.jit(self._decode_fn)
         self._prefill_cache = {}  # jitted prefill per padded length
@@ -114,28 +220,41 @@ class ServeEngine:
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, new_state
 
+    def _bucketed(self, S: int) -> int:
+        """Pad length for a prompt of S tokens: next bucket multiple,
+        capped at max_len.  SSM models prefill at exact length (the
+        recurrence would integrate a padded tail — see lm.prefill)."""
+        if self._is_ssm:
+            return S
+        b = self.prefill_bucket
+        return min(-(-S // b) * b, self.max_len)
+
     def _prefill_for(self, padded: int):
         if padded not in self._prefill_cache:
-            def fn(params, tokens):
-                return self.model.prefill(
-                    params, {"tokens": tokens}, self.policy,
-                    max_len=self.max_len,
-                )
+            if self._is_ssm:
+                def fn(params, tokens, n_valid):
+                    del n_valid  # exact-length prefill
+                    return self.model.prefill(
+                        params, {"tokens": tokens}, self.policy,
+                        max_len=self.max_len,
+                    )
+            else:
+                def fn(params, tokens, n_valid):
+                    return self.model.prefill(
+                        params, {"tokens": tokens}, self.policy,
+                        max_len=self.max_len, n_valid=n_valid,
+                    )
 
             self._prefill_cache[padded] = jax.jit(fn)
         return self._prefill_cache[padded]
 
-    # -------------------------------------------------------------- public
-    def submit(self, req: Request):
-        need = len(req.prompt) + req.max_new_tokens
-        if need > self.max_len:
-            raise ValueError(
-                f"request exceeds engine max_len: prompt of "
-                f"{len(req.prompt)} tokens + max_new_tokens="
-                f"{req.max_new_tokens} needs {need} > max_len={self.max_len}"
-            )
-        self.queue.append(req)
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill program shapes built so far (the bucketing
+        regression tests assert this stays <= the bucket count)."""
+        return len(self._prefill_cache)
 
+    # -------------------------------------------------------------- public
     def _insert_state(self, slot: int, sub: DecodeState, prompt_len: int,
                       first_token: int):
         """Scatter a batch-1 prefill DecodeState into slot ``slot``."""
@@ -175,11 +294,12 @@ class ServeEngine:
                 continue
             req = self.queue.pop(0)
             S = len(req.prompt)
-            # Exact-length prefill: one compile per distinct prompt length.
-            # (Production buckets + left-pads with an attention mask; exact
-            # lengths keep positions trivially correct and tests tight.)
-            logits, sub = self._prefill_for(S)(
-                self.params, jnp.asarray(req.prompt[None].astype(np.int32))
+            padded = self._bucketed(S)
+            tokens = np.zeros((1, padded), np.int32)
+            tokens[0, :S] = req.prompt
+            logits, sub = self._prefill_for(padded)(
+                self.params, jnp.asarray(tokens),
+                jnp.asarray([S], jnp.int32),
             )
             first = int(jax.device_get(jnp.argmax(logits[0], axis=-1)))
             self.active[slot] = True
@@ -192,18 +312,11 @@ class ServeEngine:
                 self._evict(slot, "length")
 
     def _evict(self, slot: int, reason: str):
-        req = self.req[slot]
-        self.done.append(
-            Completion(
-                uid=req.uid,
-                tokens=list(self.generated[slot]),
-                prompt_len=len(req.prompt),
-                finished_reason=reason,
-            )
-        )
+        self._complete(slot, reason)
         self.active[slot] = False
-        self.req[slot] = None
-        self.generated[slot] = []
+
+    def _has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active.any())
 
     def tick(self):
         """One engine iteration: admit -> batched decode -> evict."""
@@ -227,11 +340,215 @@ class ServeEngine:
             elif len(self.generated[slot]) >= req.max_new_tokens:
                 self._evict(slot, "length")
 
-    def run_until_done(self, max_ticks: int = 10_000) -> list[Completion]:
-        while (self.queue or self.active.any()) and self.ticks < max_ticks:
-            self.tick()
-        return self.done
-
     @property
     def utilization(self) -> float:
         return float(self.active.mean())
+
+
+class PagedServeEngine(_EngineBase):
+    """Paged-KV continuous batching: block pool + chunked prefill.
+
+    Admission reserves a request's worst-case page count from the shared
+    ``PagePool`` (FCFS — the queue head blocks, which keeps admission
+    order deterministic and can never deadlock a running sequence).
+    Prefill streams each prompt through the jitted ``paged_step`` one
+    ``prefill_chunk`` tile per tick while other slots keep decoding: rows
+    not participating in a call carry ``n_valid = 0`` and an all -1 page
+    table, so their writes land in the trash page and their position
+    doesn't advance — row independence makes the interleaving order
+    unobservable in the tokens.
+    """
+
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        n_slots: int = 4,
+        max_len: int = 512,
+        policy: Policy = QuantPolicy(),
+        page_size: int = 16,
+        n_pages: int | None = None,
+        prefill_chunk: int | None = None,
+        kv: str = "auto",
+        compress: bool = False,
+    ):
+        self.model = model
+        mode = kv_cache_mode(policy)
+        if kv == "auto":
+            kv = {"int8": "int8", "fp8": "fp8"}.get(mode, "fp")
+        if kv not in ("fp", "int8", "fp8"):
+            raise ValueError(
+                f"kv must be 'auto', 'fp', 'int8' or 'fp8'; got {kv!r}")
+        if prefill_chunk is None:
+            prefill_chunk = max(page_size, -(-64 // page_size) * page_size)
+        geo = PageGeometry(page_size=page_size,
+                           n_pages=(n_pages if n_pages is not None
+                                    else n_slots
+                                    * pages_for(max_len, page_size)),
+                           max_len=max_len, prefill_chunk=prefill_chunk)
+        check_geometry(geo)
+        self.geometry = geo
+        self.kv = kv
+
+        self.weight_bytes = None
+        if compress:
+            from repro.models import serving_transforms as st
+
+            served = st.compress_weights(params, policy)
+            self.weight_bytes = st.weight_bytes_report(params, served)
+            params = served
+            policy = st.serving_policy(policy)
+        self.params = params
+        self.policy = policy
+        self.n_slots = n_slots
+        self.max_len = max_len
+
+        # raises TypeError for SSM families — pages only make sense for
+        # attention's O(T) cache
+        self.state = model.init_paged_state(
+            n_slots, page_size=geo.page_size, n_pages=geo.n_pages,
+            max_pages_per_seq=geo.max_pages_per_seq, kv=kv)
+        self.pool = PagePool(geo.n_pages)
+        self.table = np.full((n_slots, geo.max_pages_per_seq), -1, np.int32)
+        self.slot_pages: list[list[int]] = [[] for _ in range(n_slots)]
+        self.active = np.zeros(n_slots, dtype=bool)      # decoding
+        self.prefilling = np.zeros(n_slots, dtype=bool)  # mid-prefill
+        self._pf_pos = [0] * n_slots  # prompt tokens consumed so far
+        self._cur = np.zeros((n_slots, 1), np.int32)
+        self._init_common(n_slots)
+
+        self._step = jax.jit(self._step_fn)
+
+    # ---------------------------------------------------------- jitted fns
+    def _step_fn(self, params, tokens, state, n_valid):
+        logits, state = self.model.paged_step(
+            params, tokens, state, n_valid=n_valid, policy=self.policy)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+    def _masked_table(self, mask: np.ndarray) -> jnp.ndarray:
+        """Device table with non-participating rows unmapped (-1): their
+        writes route to the trash page inside the step."""
+        return jnp.asarray(
+            np.where(mask[:, None], self.table, -1).astype(np.int32))
+
+    # ------------------------------------------------------------ admission
+    def _admit(self):
+        while self.queue:
+            free = [s for s in range(self.n_slots)
+                    if not self.active[s] and not self.prefilling[s]]
+            if not free:
+                return
+            req = self.queue[0]
+            need = pages_for(len(req.prompt) + req.max_new_tokens,
+                             self.geometry.page_size)
+            pages = self.pool.alloc(need)
+            if pages is None:
+                return  # FCFS: the head waits for pages; no overtaking
+            self.queue.pop(0)
+            slot = free[0]
+            self.slot_pages[slot] = pages
+            self.table[slot, :] = -1
+            self.table[slot, :need] = pages
+            self.prefilling[slot] = True
+            self.req[slot] = req
+            self.generated[slot] = []
+            self._pf_pos[slot] = 0
+            self.state = self.state._replace(
+                position=self.state.position.at[slot].set(0))
+
+    # -------------------------------------------------------------- prefill
+    def _prefill_tick(self):
+        rows = [s for s in range(self.n_slots) if self.prefilling[s]]
+        if not rows:
+            return
+        C = self.geometry.prefill_chunk
+        tokens = np.zeros((self.n_slots, C), np.int32)
+        n_valid = np.zeros((self.n_slots,), np.int32)
+        for s in rows:
+            p = self.req[s].prompt
+            off = self._pf_pos[s]
+            m = min(C, len(p) - off)
+            tokens[s, :m] = p[off:off + m]
+            n_valid[s] = m
+        state = self.state._replace(pages=self.state.pages._replace(
+            table=self._masked_table(self.prefilling)))
+        tok, state = self._step(self.params, jnp.asarray(tokens), state,
+                                jnp.asarray(n_valid))
+        self.state = state
+        toks = np.asarray(jax.device_get(tok)).reshape(-1)
+        for s in rows:
+            self._pf_pos[s] += int(n_valid[s])
+            if self._pf_pos[s] < len(self.req[s].prompt):
+                continue
+            first = int(toks[s])
+            self.prefilling[s] = False
+            self.active[s] = True
+            self.generated[s] = [first]
+            self._cur[s, 0] = first
+            req = self.req[s]
+            if req.eos_id is not None and first == req.eos_id:
+                self._evict(s, "eos")
+            elif req.max_new_tokens <= 1:
+                self._evict(s, "length")
+
+    # --------------------------------------------------------------- decode
+    def _decode_tick(self):
+        if not self.active.any():
+            return
+        state = self.state._replace(pages=self.state.pages._replace(
+            table=self._masked_table(self.active)))
+        tok, state = self._step(
+            self.params, jnp.asarray(self._cur), state,
+            jnp.asarray(self.active.astype(np.int32)))
+        self.state = state
+        toks = np.asarray(jax.device_get(tok)).reshape(-1)
+        for slot in range(self.n_slots):
+            if not self.active[slot]:
+                continue
+            req = self.req[slot]
+            t = int(toks[slot])
+            self.generated[slot].append(t)
+            self._cur[slot, 0] = t
+            if req.eos_id is not None and t == req.eos_id:
+                self._evict(slot, "eos")
+            elif len(self.generated[slot]) >= req.max_new_tokens:
+                self._evict(slot, "length")
+
+    def _evict(self, slot: int, reason: str):
+        self._complete(slot, reason)
+        self.pool.free(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        self.table[slot, :] = -1
+        self.active[slot] = False
+        self.prefilling[slot] = False
+
+    # -------------------------------------------------------------- driver
+    def _has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active.any()) \
+            or bool(self.prefilling.any())
+
+    def tick(self):
+        """Admit -> one prefill chunk per prefilling slot -> one decode
+        step over the active slots."""
+        self._admit()
+        self._prefill_tick()
+        self._decode_tick()
+        self.ticks += 1
+
+    # ----------------------------------------------------------- reporting
+    @property
+    def utilization(self) -> float:
+        return float((self.active | self.prefilling).mean())
+
+    def page_stats(self) -> dict:
+        return self.pool.stats()
+
+    def kv_bytes(self) -> dict:
+        """Resident KV bytes at the CURRENT pool occupancy (see
+        ``kv_pages.resident_kv_bytes`` for the equivalents)."""
+        c = self.model.cfg
+        return resident_kv_bytes(
+            self.pool.in_use, page_size=self.geometry.page_size,
+            n_kv=c.n_kv, head_dim=c.head_dim_, n_layers=c.n_layers,
+            kv=self.kv, fp_bytes=jnp.dtype(c.dtype).itemsize)

@@ -27,6 +27,22 @@ def make_decode_step(model, policy: Policy = QuantPolicy()) -> Callable:
     return decode_step
 
 
+def make_paged_step(model, policy: Policy = QuantPolicy()) -> Callable:
+    """Unified paged serving step (chunked prefill AND decode).
+
+    ``tokens`` is (B, S): S = prefill_chunk streams one prompt tile per
+    prefilling row, S = 1 is a decode tick; rows not participating carry
+    ``n_valid = 0`` and an unmapped (-1) page-table row.  Jitting this
+    yields exactly two program shapes per engine.
+    """
+    def paged_step(params, tokens, state, n_valid):
+        logits, state = model.paged_step(params, tokens, state,
+                                         n_valid=n_valid, policy=policy)
+        return logits, state
+
+    return paged_step
+
+
 def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
 

@@ -112,6 +112,53 @@ def test_attention_module_flash_routing():
                                rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize(
+    "s,t,q_offset,bq,bk",
+    [
+        (64, 256, 192, 64, 64),    # suffix queries (chunked prefill tail)
+        (64, 256, 0, 64, 128),     # prefix queries: history masked out
+        (64, 256, 100, 32, 64),    # offset not block-aligned
+        (128, 128, 64, 64, 64),    # S == T with a non-zero offset
+    ],
+)
+def test_flash_q_offset_parity(s, t, q_offset, bq, bk):
+    """Causal masking with queries at absolute position ``q_offset`` must
+    match the oracle across block tilings — the S != T case the old kernel
+    silently got wrong by pinning queries to position 0."""
+    q, k, v = _rand(2, s, t, 32, seed=9)
+    got = flash_attention(q, k, v, q_offset=q_offset, block_q=bq,
+                          block_k=bk, interpret=True)
+    want = flash_attention_ref(q, k, v, q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_causal_rect_requires_offset():
+    """A causal S != T call without an explicit q_offset must raise — the
+    old behavior (assume position 0) masked the whole history for decode-
+    style suffix queries."""
+    q, k, v = _rand(1, 64, 256, 32, seed=10)
+    with pytest.raises(ValueError, match="needs an explicit"):
+        flash_attention(q, k, v, interpret=True)
+    # non-causal rectangles never need an offset
+    flash_attention(q, k, v, causal=False, block_q=64, block_k=128,
+                    interpret=True)
+
+
+def test_flash_ref_default_offset_is_suffix():
+    """The ref path defaults q_offset to T - S (queries are the trailing
+    suffix): row i of S suffix queries == row T - S + i of a full square
+    causal pass."""
+    rng = np.random.RandomState(11)
+    k = jnp.asarray(rng.randn(1, 256, 32), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 256, 32), jnp.float32)
+    qfull = jnp.asarray(rng.randn(1, 256, 32), jnp.float32)
+    full = flash_attention_ref(qfull, k, v)
+    tail = flash_attention_ref(qfull[:, 192:], k, v)  # default offset 192
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, 192:]),
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_attention_flash_falls_back_on_softcap():
     """softcap (gemma2) is unsupported by the fused kernel: the module must
     silently keep the jnp path, not mis-compute."""

@@ -180,6 +180,54 @@ def test_attention_blocks_not_tiling_is_ql304():
                 shape=SHAPES["train_4k"]).ok
 
 
+def test_paged_geometry_diagnostics_ql305_307():
+    from repro.serve.kv_pages import PageGeometry, check_geometry
+
+    # pool smaller than one maximal request: QL305, same text as runtime
+    geo = PageGeometry(page_size=8, n_pages=2, max_len=64, prefill_chunk=16)
+    r = lint(get_config("qwen2-7b"), preset("fp32"), pages=geo)
+    ql305 = [d for d in r.errors if d.code == "QL305"]
+    assert len(ql305) == 1
+    with pytest.raises(ValueError) as ei:
+        check_geometry(geo)
+    assert str(ei.value) == ql305[0].message
+
+    # chunk not tiling by the page size: QL306, same text as runtime
+    geo = PageGeometry(page_size=8, n_pages=16, max_len=64, prefill_chunk=20)
+    r = lint(get_config("qwen2-7b"), preset("fp32"), pages=geo)
+    ql306 = [d for d in r.errors if d.code == "QL306"]
+    assert len(ql306) == 1
+    with pytest.raises(ValueError) as ei:
+        check_geometry(geo)
+    assert str(ei.value) == ql306[0].message
+
+    # coarse pages: QL307 advisory only — still launchable
+    geo = PageGeometry(page_size=32, n_pages=4, max_len=64, prefill_chunk=32)
+    r = lint(get_config("qwen2-7b"), preset("fp32"), pages=geo)
+    assert r.ok and r.has("QL307")
+    check_geometry(geo)  # runtime never raises on waste
+
+    # sane geometry: silent
+    geo = PageGeometry(page_size=8, n_pages=32, max_len=64, prefill_chunk=16)
+    r = lint(get_config("qwen2-7b"), preset("fp32"), pages=geo)
+    assert r.ok and not any(d.code.startswith("QL30") and d.code >= "QL305"
+                            for d in r)
+
+
+def test_preflight_pages_gate():
+    import io
+
+    from repro.launch.lint import preflight
+    from repro.serve.kv_pages import PageGeometry
+
+    buf = io.StringIO()
+    with pytest.raises(SystemExit):
+        preflight(get_config("qwen2-7b"), preset("fp32"),
+                  pages=PageGeometry(page_size=8, n_pages=2, max_len=64,
+                                     prefill_chunk=16), out=buf)
+    assert "QL305" in buf.getvalue()
+
+
 def test_unknown_recipe_is_ql101():
     r = lint(get_config("qwen2-7b"), preset("w4a8_mse"),
              "no_such_recipe")
