@@ -113,6 +113,15 @@ _register("QL306", Severity.ERROR, "prefill chunk does not tile by the KV "
 _register("QL307", Severity.WARNING, "coarse KV pages waste reserved "
                                      "capacity")
 
+# --- QL4xx: speculative serving --------------------------------------------
+_register("QL401", Severity.ERROR, "speculative draft/target kv_cache "
+                                   "storage modes differ")
+_register("QL402", Severity.WARNING, "speculative draft weights at least "
+                                     "as wide as the target's")
+_register("QL403", Severity.ERROR, "quantized KV pages under paged "
+                                   "speculative serving")
+_register("QL404", Severity.ERROR, "speculative draft depth out of range")
+
 
 @dataclasses.dataclass(frozen=True)
 class Diagnostic:

@@ -92,6 +92,42 @@ def page_waste_message(page_size: int, max_len: int, waste_pct: float) -> str:
     )
 
 
+def spec_kv_mismatch_message(draft_mode: str, target_mode: str) -> str:
+    """Speculative draft/target kv_cache storage modes must agree
+    (QL401 / SpeculativeServeEngine constructor): the two sides replay
+    the same positions against their own caches, and a mode mismatch
+    means the drafts were proposed against a different-fidelity context
+    than the one the target verifies."""
+    return (
+        f"speculative draft and target policies disagree on kv_cache "
+        f"storage (draft={draft_mode!r} vs target={target_mode!r}); align "
+        "both sides with with_kv_cache() before serving"
+    )
+
+
+def spec_quantized_pages_message(mode: str) -> str:
+    """Paged speculative serving requires fp page storage (QL403 /
+    SpeculativeServeEngine constructor): the quantized page write path
+    needs page-aligned chunks — a k+1 verify chunk rarely is — and the
+    per-(page, head) scales only ratchet upward, so a rollback could
+    never undo a rejected token's scale bump."""
+    return (
+        f"paged speculative serving cannot store kv_cache={mode!r} pages: "
+        "verify chunks are not page-aligned and page scales are monotone "
+        "(a rollback cannot lower them); use fp pages or the fixed-slot "
+        "engine's per-token int8 ring cache"
+    )
+
+
+def spec_draft_k_message(draft_k: int, max_len: int) -> str:
+    """Speculative draft depth sanity bound (QL404 /
+    SpeculativeServeEngine constructor)."""
+    return (
+        f"speculative draft depth draft_k={draft_k} is out of range: need "
+        f"1 <= draft_k < max_len ({max_len})"
+    )
+
+
 def flash_q_offset_message(S: int, T: int) -> str:
     """Causal flash attention with S != T needs an explicit q_offset
     (kernels.flash_attention raises this; the ref path defaults T - S)."""

@@ -36,14 +36,17 @@ def site_universe(cfg) -> list:
 def lint(cfg, policy: Policy, recipe=None, *, shape=None,
          compress: bool = False, prequant: bool = False,
          scan_layers: bool | None = None, model_name: str = "",
-         pages=None) -> Report:
+         pages=None, speculative=None) -> Report:
     """Statically analyze a full launch tuple; returns a ``Report``.
 
     ``scan_layers`` defaults to the config's own setting; launchers that
     auto-unroll for layer rules pass their *final* value so QL004 reflects
     what will actually run.  ``recipe`` is a QuantRecipe/name/None.
     ``pages`` is a ``serve.kv_pages.PageGeometry`` when linting a paged
-    serving launch (QL305-QL307), else None.
+    serving launch (QL305-QL307), else None.  ``speculative`` is a dict
+    (or duck-typed object) with ``draft_policy``/``draft_k`` when linting
+    a speculative serving launch (QL4xx), else None — ``policy`` is then
+    the TARGET side.
     """
     ctx = {
         "arch": getattr(cfg, "name", "?"),
@@ -53,6 +56,7 @@ def lint(cfg, policy: Policy, recipe=None, *, shape=None,
         "compress": compress,
         "prequant": prequant,
         "paged": pages is not None,
+        "speculative": speculative is not None,
     }
     report = Report(context=ctx)
     mat_sites = enumerate_matmul_sites(cfg)
@@ -107,6 +111,14 @@ def lint(cfg, policy: Policy, recipe=None, *, shape=None,
         cfg, policy, mat_sites, compress=compress, shape=shape))
     if pages is not None:
         report.extend(kernel_lint.lint_pages(pages))
+
+    # --- QL4xx: speculative serving -----------------------------------------
+    if speculative is not None:
+        from repro.analysis import spec_lint
+
+        report.extend(spec_lint.lint_speculative(
+            cfg, policy, speculative, paged=pages is not None,
+            max_len=getattr(pages, "max_len", None)))
     return report
 
 

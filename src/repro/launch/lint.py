@@ -25,20 +25,23 @@ import sys
 
 
 def preflight(cfg, policy, recipe=None, *, shape=None, compress=False,
-              prequant=False, scan_layers=None, pages=None, where="launch",
-              out=sys.stderr) -> None:
+              prequant=False, scan_layers=None, pages=None, speculative=None,
+              where="launch", out=sys.stderr) -> None:
     """Launcher gate: lint the tuple; SystemExit(2) on any error.
 
     Warnings and infos are printed to ``out`` and the launch proceeds.
     ``scan_layers`` should be the launcher's FINAL value (after its
     layer-rule unroll fallback) so QL004 reflects what will actually run.
     ``pages`` carries the PageGeometry of a paged serving launch so the
-    gate runs QL305-QL307 before any device allocation.
+    gate runs QL305-QL307 before any device allocation.  ``speculative``
+    carries {draft_policy, draft_k} for a speculative launch (QL4xx);
+    ``policy`` is then the target side.
     """
     from repro.analysis.qlint import lint
 
     report = lint(cfg, policy, recipe, shape=shape, compress=compress,
-                  prequant=prequant, scan_layers=scan_layers, pages=pages)
+                  prequant=prequant, scan_layers=scan_layers, pages=pages,
+                  speculative=speculative)
     if report.errors:
         print(f"qlint: {where} blocked by "
               f"{len(report.errors)} error(s):", file=out)

@@ -52,6 +52,25 @@ def main() -> int:
                     choices=("auto", "fp", "int8", "fp8"),
                     help="page storage format (--paged); 'auto' follows "
                     "the policy's kv_cache mode")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative serving: a compressed low-precision "
+                    "draft (same param tree, --draft-preset policy) "
+                    "proposes --draft-k tokens per round and the target "
+                    "verifies them in one chunked pass; reports "
+                    "acceptance stats (--paged selects paged KV with fp "
+                    "pages — --kv is ignored)")
+    ap.add_argument("--draft-preset", default="w4a8_abfp",
+                    help="draft-side policy preset (--speculate)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens proposed per verify pass "
+                    "(--speculate)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy; "
+                    "under --speculate, > 0 switches acceptance to "
+                    "rejection sampling)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k sampling cutoff (0 = full "
+                    "distribution)")
     ap.add_argument("--no-lint", action="store_true",
                     help="skip the qlint pre-flight gate")
     args = ap.parse_args()
@@ -62,6 +81,7 @@ def main() -> int:
     from repro.nn.module import unbox
     from repro.serve.engine import PagedServeEngine, Request, ServeEngine
     from repro.serve.kv_pages import PageGeometry, pages_for
+    from repro.serve.speculative import SpeculativeServeEngine
 
     cfg = get_config(args.arch)
     if cfg.family == "vit":
@@ -97,13 +117,21 @@ def main() -> int:
                                                  args.page_size))
         pages_geo = PageGeometry(page_size=args.page_size, n_pages=n_pages,
                                  max_len=args.max_len, prefill_chunk=chunk)
+    draft_policy = None
+    speculative = None
+    if args.speculate:
+        draft_policy = preset(args.draft_preset, n_layers=cfg.n_layers)
+        if has_layer_rules(draft_policy):
+            cfg = cfg.replace(scan_layers=False)
+        speculative = {"draft_policy": draft_policy,
+                       "draft_k": args.draft_k}
     if not args.no_lint:
         # pre-flight gate: errors abort before any weights are built
         from repro.launch.lint import preflight
 
         preflight(cfg, policy, rec, compress=args.compress,
                   scan_layers=cfg.scan_layers, pages=pages_geo,
-                  where="serve")
+                  speculative=speculative, where="serve")
     model = build_model(cfg)
     params = unbox(model.init(jax.random.PRNGKey(args.seed)))
     if rec is not None:
@@ -136,7 +164,18 @@ def main() -> int:
             print(f"note: recipe {rec.name!r} produced a static q tree; "
                   "serving ignores it (dynamic-max fallback)",
                   file=sys.stderr)
-    if args.paged:
+    if args.speculate:
+        kw = {}
+        if args.paged:
+            kw = dict(kv_cache="paged", page_size=pages_geo.page_size,
+                      n_pages=pages_geo.n_pages,
+                      prefill_chunk=pages_geo.prefill_chunk)
+        engine = SpeculativeServeEngine(
+            model, params, target_policy=policy, draft_policy=draft_policy,
+            draft_k=args.draft_k, n_slots=args.n_slots,
+            max_len=args.max_len, **kw,
+        )
+    elif args.paged:
         engine = PagedServeEngine(
             model, params, n_slots=args.n_slots, max_len=args.max_len,
             policy=policy, compress=args.compress,
@@ -168,14 +207,61 @@ def main() -> int:
                 uid=uid,
                 prompt=rng.randint(0, cfg.vocab, size=plen).astype(np.int32),
                 max_new_tokens=args.max_new_tokens,
+                temperature=args.temperature,
+                top_k=args.top_k,
             )
         )
     t0 = time.perf_counter()
     done = engine.run_until_done()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(c.tokens) for c in done)
+    # per-request completion metadata (not just aggregate tok/s): accept
+    # counts and target steps are per-request facts, so report them there
+    completions = []
+    for c in done:
+        row = {
+            "uid": c.uid,
+            "prompt_len": c.prompt_len,
+            "n_tokens": len(c.tokens),
+            "finished_reason": c.finished_reason,
+        }
+        if args.speculate:
+            row.update({
+                "target_steps": c.target_steps,
+                "drafted_tokens": c.drafted_tokens,
+                "accepted_draft_tokens": c.accepted_draft_tokens,
+                "acceptance_rate": round(
+                    c.accepted_draft_tokens / c.drafted_tokens, 4)
+                    if c.drafted_tokens else 0.0,
+            })
+        completions.append(row)
+    spec_info = {}
+    if args.speculate:
+        stats = engine.acceptance_stats()
+        spec_info = {
+            "speculative": {
+                "draft_preset": args.draft_preset,
+                "draft_k": args.draft_k,
+                "kv_cache": engine.kv_cache,
+                "rounds": stats["rounds"],
+                "target_steps": stats["target_steps"],
+                "draft_steps": stats["draft_steps"],
+                "drafted": stats["drafted"],
+                "accepted": stats["accepted"],
+                "acceptance_rate": round(stats["acceptance_rate"], 4),
+                "accepted_per_target_step": round(
+                    stats["accepted_per_target_step"], 4),
+            }
+        }
+        if engine.weight_bytes is not None:
+            from repro.models.serving_transforms import weight_bytes_summary
+
+            spec_info["speculative"]["draft_weights"] = \
+                weight_bytes_summary(engine.weight_bytes)
+        if args.paged:
+            spec_info["speculative"]["page_stats"] = engine.page_stats()
     paged_info = {}
-    if args.paged:
+    if args.paged and not args.speculate:
         stats = engine.page_stats()
         # capacity quoted per fully-occupied page, not the drained pool
         cap = engine.kv_bytes()
@@ -198,8 +284,10 @@ def main() -> int:
                 "ticks": engine.ticks,
                 "wall_s": round(dt, 3),
                 "tokens_per_s": round(total_tokens / dt, 1),
+                "completions": completions,
                 **recipe_info,
                 **compress_info,
+                **spec_info,
                 **paged_info,
             }
         )

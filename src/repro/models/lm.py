@@ -533,6 +533,73 @@ class TransformerLM:
         logits = self.head_logits(params, x, policy)
         return logits[:, 0], new_state
 
+    def chunk_step(self, params, tokens, state: DecodeState, *,
+                   n_valid, policy=QuantPolicy(), q=None):
+        """Score a (B, S) token chunk against the fixed-slot KV cache.
+
+        The speculative verify pass: equivalent to S sequential
+        ``decode_step`` calls under teacher forcing, but ONE jit shape and
+        one pass, returning logits at EVERY chunk position (B, S, vocab).
+        Rows score their first ``n_valid`` tokens; ``n_valid = 0`` masks a
+        row entirely.  ``position`` advances by ``n_valid`` per row — the
+        caller rolls back a rejected suffix by resetting positions, which
+        the ring-buffer validity mask honors without any cache surgery.
+        Attention-family models only: SSM recurrent state cannot rewind.
+        """
+        c = self.cfg
+        check_scan_compatible(policy, c.scan_layers, c.name)
+        if self.is_ssm:
+            raise TypeError(
+                "chunk_step is attention-family only; SSM recurrent state "
+                f"cannot roll back a rejected draft suffix ({c.name})")
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        pos = jnp.asarray(state.position, jnp.int32)
+        x, _ = self._embed_in(params, tokens, pos_offset=pos)
+        windows = self.layer_windows(0)
+
+        def body(xc, xs, name="block"):
+            bp, cache, w = xs
+            h = _norm(c).apply(bp["ln1"], xc)
+            attn = self._attention(f"{name}/attn")
+            h, cache = attn.chunk_step(
+                bp["attn"], h, cache, position=pos, n_valid=n_valid,
+                policy=policy, window=w,
+            )
+            if c.post_norms:
+                h = _norm(c).apply(bp["ln1_post"], h)
+            xc = xc + h
+            h = _norm(c).apply(bp["ln2"], xc)
+            if self.is_moe:
+                h, _ = self._moe(f"{name}/ffn").apply(bp["ffn"], h, policy)
+            else:
+                h = self._mlp(f"{name}/ffn").apply(bp["ffn"], h, policy)
+            if c.post_norms:
+                h = _norm(c).apply(bp["ln2_post"], h)
+            return xc + h, cache
+
+        if c.scan_layers:
+            def scan_body(xc, xs):
+                bp, cache, w = xs
+                return body(xc, (bp, cache, w))
+            x, new_kv = jax.lax.scan(
+                scan_body, x, (params["blocks"], state.kv, windows))
+        else:
+            caches = []
+            wl = self.layer_windows_py()
+            for i, bp in enumerate(params["blocks"]):
+                ci = jax.tree_util.tree_map(lambda a: a[i], state.kv)
+                ci = KVCache(*ci)
+                x, cnew = body(
+                    x, (bp, ci, jnp.asarray(int(wl[i]), jnp.int32)),
+                    name=f"blocks.{i}")
+                caches.append(cnew)
+            new_kv = jax.tree_util.tree_map(lambda *a: jnp.stack(a),
+                                            *caches)
+        new_state = DecodeState(kv=new_kv, ssm=None, position=pos + n_valid)
+        x = _norm(c).apply(params["final_norm"], x)
+        logits = self.head_logits(params, x, policy)  # (B, S, vocab_padded)
+        return logits, new_state
+
     # ---------------------------------------------------------- paged decode
     def init_paged_state(self, batch: int, *, page_size: int, n_pages: int,
                          max_pages_per_seq: int,
@@ -562,7 +629,8 @@ class TransformerLM:
         )
 
     def paged_step(self, params, tokens, state: DecodeState, *,
-                   n_valid, policy=QuantPolicy(), q=None):
+                   n_valid, policy=QuantPolicy(), q=None,
+                   all_logits: bool = False):
         """One paged serving step over a (B, S) token chunk.
 
         S = 1 is a decode tick over every slot; S = chunk is one chunked-
@@ -571,6 +639,10 @@ class TransformerLM:
         ``state.pages.table``, attends over each row's gathered pages and
         returns (logits at each row's last valid token, new state) with
         ``position`` advanced by ``n_valid``.
+
+        ``all_logits``: return logits at EVERY chunk position (B, S,
+        vocab) instead of the last valid one — the speculative verify
+        pass scores all k+1 draft positions from one call.
         """
         c = self.cfg
         check_scan_compatible(policy, c.scan_layers, c.name)
@@ -625,15 +697,18 @@ class TransformerLM:
             new_cache = jax.tree_util.tree_map(lambda *a: jnp.stack(a),
                                                *caches)
 
+        new_state = DecodeState(
+            kv=None, ssm=None, position=pos + n_valid,
+            pages=PagedState(cache=new_cache, table=table),
+        )
+        if all_logits:
+            x = _norm(c).apply(params["final_norm"], x)
+            return self.head_logits(params, x, policy), new_state
         sel = jnp.maximum(n_valid - 1, 0)[:, None, None]
         x = jnp.take_along_axis(
             x, jnp.broadcast_to(sel, (B, 1, x.shape[-1])), axis=1)
         x = _norm(c).apply(params["final_norm"], x)
         logits = self.head_logits(params, x, policy)
-        new_state = DecodeState(
-            kv=None, ssm=None, position=pos + n_valid,
-            pages=PagedState(cache=new_cache, table=table),
-        )
         return logits[:, 0], new_state
 
 

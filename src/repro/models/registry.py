@@ -91,6 +91,12 @@ class Model:
     def decode_step(self, params, token, state, policy=QuantPolicy()):
         return self.inner.decode_step(params, token, state, policy=policy)
 
+    def chunk_step(self, params, tokens, state, *, n_valid,
+                   policy=QuantPolicy()):
+        """All-position scoring of a token chunk (speculative verify)."""
+        return self.inner.chunk_step(params, tokens, state,
+                                     n_valid=n_valid, policy=policy)
+
     def init_decode_state(self, batch: int, max_len: int, **kw):
         return self.inner.init_decode_state(batch, max_len, **kw)
 
@@ -99,9 +105,10 @@ class Model:
         return self.inner.init_paged_state(batch, **kw)
 
     def paged_step(self, params, tokens, state, *, n_valid,
-                   policy=QuantPolicy()):
+                   policy=QuantPolicy(), all_logits: bool = False):
         return self.inner.paged_step(params, tokens, state,
-                                     n_valid=n_valid, policy=policy)
+                                     n_valid=n_valid, policy=policy,
+                                     all_logits=all_logits)
 
 
 def build_model(cfg: ArchConfig):

@@ -596,6 +596,119 @@ class Attention:
                           q=None if q is None else q.get("o"))
         return shd.constrain(y, ("batch", "seq_res", "embed")), cache
 
+    def chunk_step(
+        self,
+        params: dict,
+        x: jnp.ndarray,  # (B, S, d_model): an S-token verify/score chunk
+        cache: KVCache,
+        *,
+        position: jnp.ndarray,  # (B,) absolute position of x[:, 0]
+        n_valid: jnp.ndarray,  # (B,) valid tokens in x (0 masks the row)
+        policy: Policy,
+        window=None,
+        q: dict | None = None,
+    ) -> tuple[jnp.ndarray, KVCache]:
+        """Write-then-attend over an S-token chunk against the ring buffer.
+
+        The speculative verify pass: score S drafted tokens in ONE call —
+        each chunk token attends to the whole cache plus the chunk's own
+        earlier tokens (strictly causal), exactly as S sequential
+        ``decode_step`` calls would, and the returned activations cover
+        every chunk position (the caller needs all S logits, not just the
+        last).  Tokens past a row's ``n_valid`` leave the cache untouched
+        and produce garbage outputs the caller ignores (dead slots in a
+        serving batch use ``n_valid = 0``).  Rolling back after a
+        rejection is the
+        caller rewinding ``position``: stale entries past the new position
+        are masked by the ring validity mask and overwritten by the next
+        write, the same convention the paged engine pins.
+        """
+        pol = resolve_policy(policy, self.name)
+        B, S, _ = x.shape
+        size = cache.k.shape[1]
+        if S > size:
+            raise ValueError(
+                f"chunk of {S} tokens exceeds the ring-buffer cache size "
+                f"{size}; a chunk must not wrap over itself")
+        position = jnp.asarray(position, jnp.int32)
+        pos_vec = jnp.broadcast_to(jnp.atleast_1d(position), (B,))
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        positions = pos_vec[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+        qh, kh, vh = self._project_qkv(params, x, positions, policy, q)
+        int8_cache = cache.k_scale is not None
+        kv_on_write = (pol.enabled and pol.attn_bmm
+                       and pol.input is not None
+                       and pol.kv_cache == "on_write")
+        if kv_on_write:
+            kh = qdq_activation(kh, pol.input, axis=-1,
+                                site=self.name + "/bmm_k")
+            vh = qdq_activation(vh, pol.input, axis=-1,
+                                site=self.name + "/bmm_v")
+        rows = jnp.arange(B)[:, None]
+        slot = positions % size  # (B, S)
+        # invalid tail tokens (>= n_valid) must leave their target slots
+        # untouched: a wrapped slot can still hold a live older position
+        keep = (jnp.arange(S, dtype=jnp.int32)[None] < n_valid[:, None])
+        kf = keep[..., None]  # (B, S, 1) over the flat kv axis
+        new_ks = new_vs = None
+        if int8_cache:
+            kc, ks = _kv_quantize(kh)  # per (token, head) — rollback-exact
+            vc, vs = _kv_quantize(vh)
+            new_k = cache.k.at[rows, slot].set(
+                jnp.where(kf, kc.reshape(B, S, -1), cache.k[rows, slot]))
+            new_v = cache.v.at[rows, slot].set(
+                jnp.where(kf, vc.reshape(B, S, -1), cache.v[rows, slot]))
+            new_ks = cache.k_scale.at[rows, slot].set(
+                jnp.where(kf, ks, cache.k_scale[rows, slot]))
+            new_vs = cache.v_scale.at[rows, slot].set(
+                jnp.where(kf, vs, cache.v_scale[rows, slot]))
+        else:
+            new_k = cache.k.at[rows, slot].set(jnp.where(
+                kf, kh.reshape(B, S, -1).astype(cache.k.dtype),
+                cache.k[rows, slot]))
+            new_v = cache.v.at[rows, slot].set(jnp.where(
+                kf, vh.reshape(B, S, -1).astype(cache.v.dtype),
+                cache.v[rows, slot]))
+        new_k = shd.constrain(new_k, ("batch", "kv_seq", "qkv"))
+        new_v = shd.constrain(new_v, ("batch", "kv_seq", "qkv"))
+        last = pos_vec + jnp.maximum(n_valid, 1) - 1  # last written position
+        cache = KVCache(new_k, new_v, jnp.max(last) + 1,
+                        k_scale=new_ks, v_scale=new_vs)
+
+        # absolute position per ring slot (decode_step's formula at the
+        # chunk's high-water mark)
+        idx = jnp.arange(size, dtype=jnp.int32)[None]  # (1, size)
+        slot_b = (last % size)[:, None]
+        ring_rounds = (last // size)[:, None] * size
+        slot_pos = idx + jnp.where(idx <= slot_b, ring_rounds,
+                                   ring_rounds - size)
+        slot_pos = jnp.where(slot_pos > last[:, None], -1, slot_pos)
+        slot_pos = jnp.where(slot_pos < 0, -1, slot_pos)
+
+        dt = jnp.dtype(self.dtype)
+        if int8_cache:
+            kv = _kv_dequantize(cache.k, cache.k_scale, self.n_kv,
+                                self.head_dim, dt)
+            vv = _kv_dequantize(cache.v, cache.v_scale, self.n_kv,
+                                self.head_dim, dt)
+        else:
+            kv = cache.k.reshape(B, size, self.n_kv, self.head_dim)
+            vv = cache.v.reshape(B, size, self.n_kv, self.head_dim)
+        if window is None:
+            window = jnp.asarray(size + 1, jnp.int32)
+        out = self._reference(qh, kv, vv, positions, slot_pos, window,
+                              policy, q=q,
+                              kv_prequant=kv_on_write or int8_cache)
+        o_dense = Dense(
+            self.n_heads * self.head_dim, self.d_model,
+            in_axis="qkv", out_axis="embed",
+            param_dtype=self.param_dtype, dtype=self.dtype,
+            name=f"{self.name}/o",
+        )
+        y = o_dense.apply(params["o"], out.reshape(B, S, -1), policy,
+                          q=None if q is None else q.get("o"))
+        return shd.constrain(y, ("batch", "seq_res", "embed")), cache
+
     # ------------------------------------------------------- paged decoding
     def init_paged_cache(self, n_pages: int, page_size: int, dtype=None,
                          kv: str = "fp") -> PagedKVCache:

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.core.policy import Policy, QuantPolicy, kv_cache_mode
 from repro.models.lm import DecodeState
+from repro.serve import steps as serve_steps
 from repro.serve.kv_pages import (PageGeometry, PagePool, check_geometry,
                                   pages_for, resident_kv_bytes)
 
@@ -59,6 +60,12 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 32
     eos_id: int | None = None
+    # sampling: 0 temperature is exact argmax (bit-identical to the old
+    # greedy-only path); top_k <= 0 keeps the full distribution; seed
+    # None derives the request's PRNG stream from its uid
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int | None = None
 
 
 @dataclasses.dataclass
@@ -67,6 +74,16 @@ class Completion:
     tokens: list  # generated ids (first token from prefill logits included)
     prompt_len: int
     finished_reason: str  # 'eos' | 'length'
+    # per-request serving metadata (speculative engines fill these in;
+    # plain engines leave the defaults)
+    target_steps: int = 0  # verify/decode passes of the target model
+    drafted_tokens: int = 0  # draft proposals scored
+    accepted_draft_tokens: int = 0  # proposals that survived verify
+
+
+def _request_key(req: Request) -> jnp.ndarray:
+    """Raw (2,) uint32 PRNG key for a request's sampling stream."""
+    return jax.random.PRNGKey(req.uid if req.seed is None else req.seed)
 
 
 class TickBudgetExhausted(RuntimeError):
@@ -115,6 +132,10 @@ class _EngineBase:
             )
         self.queue.append(req)
 
+    def _completion_extra(self, slot: int) -> dict:
+        """Per-request metadata hook (speculative engines override)."""
+        return {}
+
     def _complete(self, slot: int, reason: str):
         req = self.req[slot]
         self.done.append(
@@ -123,6 +144,7 @@ class _EngineBase:
                 tokens=list(self.generated[slot]),
                 prompt_len=len(req.prompt),
                 finished_reason=reason,
+                **self._completion_extra(slot),
             )
         )
         self.req[slot] = None
@@ -207,18 +229,23 @@ class ServeEngine(_EngineBase):
         self.cur_token = jnp.zeros((n_slots, 1), jnp.int32)
         # host bookkeeping
         self.active = np.zeros(n_slots, dtype=bool)
+        # per-slot sampling params + raw PRNG keys (threaded through the
+        # jitted decode, which returns the split-off carry keys)
+        self._temps = np.zeros(n_slots, np.float32)
+        self._topk = np.zeros(n_slots, np.int32)
+        self._keys = jnp.zeros((n_slots, 2), jnp.uint32)
         self._init_common(n_slots)
 
         self._decode = jax.jit(self._decode_fn)
         self._prefill_cache = {}  # jitted prefill per padded length
 
     # ---------------------------------------------------------- jitted fns
-    def _decode_fn(self, params, token, state):
+    def _decode_fn(self, params, token, state, keys, temps, topk):
         logits, new_state = self.model.decode_step(
             params, token, state, self.policy
         )
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return next_tok, new_state
+        toks, new_keys = serve_steps.sample_step(logits, keys, temps, topk)
+        return toks[:, 0], new_state, new_keys
 
     def _bucketed(self, S: int) -> int:
         """Pad length for a prompt of S tokens: next bucket multiple,
@@ -301,7 +328,15 @@ class ServeEngine(_EngineBase):
                 self.params, jnp.asarray(tokens),
                 jnp.asarray([S], jnp.int32),
             )
-            first = int(jax.device_get(jnp.argmax(logits[0], axis=-1)))
+            carry, use = jax.random.split(_request_key(req))
+            first_tok = serve_steps.sample_tokens(
+                logits[0:1], use[None],
+                jnp.asarray([req.temperature], jnp.float32),
+                jnp.asarray([req.top_k], jnp.int32))
+            first = int(jax.device_get(first_tok)[0, 0])
+            self._keys = self._keys.at[slot].set(carry)
+            self._temps[slot] = req.temperature
+            self._topk[slot] = req.top_k
             self.active[slot] = True
             self.req[slot] = req
             self.generated[slot] = [first]
@@ -323,8 +358,9 @@ class ServeEngine(_EngineBase):
         self._admit()
         if not self.active.any():
             return
-        next_tok, self.state = self._decode(
-            self.params, self.cur_token, self.state
+        next_tok, self.state, self._keys = self._decode(
+            self.params, self.cur_token, self.state, self._keys,
+            jnp.asarray(self._temps), jnp.asarray(self._topk),
         )
         self.cur_token = next_tok.reshape(self.n_slots, 1)
         toks = np.asarray(jax.device_get(next_tok)).reshape(-1)
@@ -416,15 +452,19 @@ class PagedServeEngine(_EngineBase):
         self.prefilling = np.zeros(n_slots, dtype=bool)  # mid-prefill
         self._pf_pos = [0] * n_slots  # prompt tokens consumed so far
         self._cur = np.zeros((n_slots, 1), np.int32)
+        self._temps = np.zeros(n_slots, np.float32)
+        self._topk = np.zeros(n_slots, np.int32)
+        self._keys = jnp.zeros((n_slots, 2), jnp.uint32)
         self._init_common(n_slots)
 
         self._step = jax.jit(self._step_fn)
 
     # ---------------------------------------------------------- jitted fns
-    def _step_fn(self, params, tokens, state, n_valid):
+    def _step_fn(self, params, tokens, state, n_valid, keys, temps, topk):
         logits, state = self.model.paged_step(
             params, tokens, state, n_valid=n_valid, policy=self.policy)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+        toks, new_keys = serve_steps.sample_step(logits, keys, temps, topk)
+        return toks[:, 0], state, new_keys
 
     def _masked_table(self, mask: np.ndarray) -> jnp.ndarray:
         """Device table with non-participating rows unmapped (-1): their
@@ -454,6 +494,9 @@ class PagedServeEngine(_EngineBase):
             self.req[slot] = req
             self.generated[slot] = []
             self._pf_pos[slot] = 0
+            self._temps[slot] = req.temperature
+            self._topk[slot] = req.top_k
+            self._keys = self._keys.at[slot].set(_request_key(req))
             self.state = self.state._replace(
                 position=self.state.position.at[slot].set(0))
 
@@ -473,8 +516,9 @@ class PagedServeEngine(_EngineBase):
             n_valid[s] = m
         state = self.state._replace(pages=self.state.pages._replace(
             table=self._masked_table(self.prefilling)))
-        tok, state = self._step(self.params, jnp.asarray(tokens), state,
-                                jnp.asarray(n_valid))
+        tok, state, self._keys = self._step(
+            self.params, jnp.asarray(tokens), state, jnp.asarray(n_valid),
+            self._keys, jnp.asarray(self._temps), jnp.asarray(self._topk))
         self.state = state
         toks = np.asarray(jax.device_get(tok)).reshape(-1)
         for s in rows:
@@ -498,9 +542,10 @@ class PagedServeEngine(_EngineBase):
             return
         state = self.state._replace(pages=self.state.pages._replace(
             table=self._masked_table(self.active)))
-        tok, state = self._step(
+        tok, state, self._keys = self._step(
             self.params, jnp.asarray(self._cur), state,
-            jnp.asarray(self.active.astype(np.int32)))
+            jnp.asarray(self.active.astype(np.int32)),
+            self._keys, jnp.asarray(self._temps), jnp.asarray(self._topk))
         self.state = state
         toks = np.asarray(jax.device_get(tok)).reshape(-1)
         for slot in range(self.n_slots):

@@ -1,4 +1,13 @@
-"""Serving step factories (prefill / decode), pjit-friendly."""
+"""Serving step factories (prefill / decode / verify) and sampling,
+pjit-friendly.
+
+Sampling contract: per-slot PRNG keys live in the engine as a (B, 2)
+uint32 array; every sampling step splits each row's key and returns the
+new keys alongside the tokens, so the whole stream stays inside the
+jitted step with no host round-trip.  ``temperature = 0`` rows reduce to
+argmax bit-identically to the old greedy-only path — mixing greedy and
+stochastic requests in one batch costs nothing.
+"""
 
 from __future__ import annotations
 
@@ -8,6 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import Policy, QuantPolicy
+
+NEG_INF = -1e9  # matches the vocab-padding mask in head_logits
 
 
 def make_prefill_step(model, policy: Policy = QuantPolicy(),
@@ -43,14 +54,110 @@ def make_paged_step(model, policy: Policy = QuantPolicy()) -> Callable:
     return paged_step
 
 
+# ---------------------------------------------------------------------------
+# Speculative step factories: draft decodes one token at a time, the
+# target scores a whole [current, d_1..d_k] chunk in ONE pass.
+# ---------------------------------------------------------------------------
+def make_draft_step(model, policy: Policy = QuantPolicy(),
+                    paged: bool = False) -> Callable:
+    """S = 1 decode returning full logits (B, V) + new state.
+
+    The speculative engine samples host-side from the returned logits
+    (it needs the draft distribution for rejection sampling anyway), so
+    the draft step stays sampling-free and shares one jit shape with
+    plain decode.
+    """
+    if paged:
+        def draft_step(params, token, state, n_valid):
+            return model.paged_step(params, token, state,
+                                    n_valid=n_valid, policy=policy)
+    else:
+        def draft_step(params, token, state):
+            return model.decode_step(params, token, state, policy)
+
+    return draft_step
+
+
+def make_verify_step(model, policy: Policy = QuantPolicy(),
+                     paged: bool = False) -> Callable:
+    """One chunked pass scoring all S positions: (B, S) -> (B, S, V).
+
+    This is the whole point of the chunk machinery — verifying k drafts
+    is ONE jit shape (S = k + 1), not k decode ticks.
+    """
+    if paged:
+        def verify_step(params, tokens, state, n_valid):
+            return model.paged_step(params, tokens, state, n_valid=n_valid,
+                                    policy=policy, all_logits=True)
+    else:
+        def verify_step(params, tokens, state, n_valid):
+            return model.chunk_step(params, tokens, state, n_valid=n_valid,
+                                    policy=policy)
+
+    return verify_step
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
 def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
 
 
+def top_k_filter(logits: jnp.ndarray, k) -> jnp.ndarray:
+    """Mask all but each row's top-k logits to NEG_INF.
+
+    ``k`` is a scalar or (B,) int array; ``k <= 0`` means no filtering
+    for that row (the full distribution survives).  Jit-safe: the
+    threshold is the k-th largest value per row, found by sorting, so k
+    can differ per row without shape polymorphism.
+    """
+    k = jnp.asarray(k, jnp.int32)
+    V = logits.shape[-1]
+    kb = jnp.broadcast_to(jnp.atleast_1d(k), logits.shape[:-1])
+    kc = jnp.clip(kb, 1, V)
+    sorted_desc = jnp.sort(logits, axis=-1)[..., ::-1]
+    thresh = jnp.take_along_axis(sorted_desc, (kc - 1)[..., None], axis=-1)
+    filtered = jnp.where(logits >= thresh, logits, NEG_INF)
+    return jnp.where((kb > 0)[..., None], filtered, logits)
+
+
+def split_keys(keys: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Split a batch of raw (B, 2) uint32 PRNG keys -> (carry, use)."""
+    pairs = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    return pairs[:, 0], pairs[:, 1]
+
+
+def sample_tokens(logits: jnp.ndarray, keys: jnp.ndarray,
+                  temperature: jnp.ndarray, top_k=None) -> jnp.ndarray:
+    """Per-row temperature/top-k sampling, (B, V) -> (B, 1) int32.
+
+    Rows with ``temperature <= 0`` take the argmax — bit-identical to
+    ``greedy_sample`` — so greedy and stochastic requests share the
+    batch.  Gumbel-argmax keeps it a single fused pass (no CDF).
+    """
+    temperature = jnp.asarray(temperature, jnp.float32)
+    tb = jnp.broadcast_to(jnp.atleast_1d(temperature), logits.shape[:-1])
+    if top_k is not None:
+        logits = top_k_filter(logits, top_k)
+    g = jax.vmap(lambda k, l: jax.random.gumbel(k, l.shape))(keys, logits)
+    scaled = logits / jnp.maximum(tb, 1e-6)[..., None]
+    stoch = jnp.argmax(scaled + g, axis=-1)
+    greedy = jnp.argmax(logits, axis=-1)
+    return jnp.where(tb > 0, stoch, greedy).astype(jnp.int32)[:, None]
+
+
+def sample_step(logits, keys, temps, topk):
+    """One sampling tick: split keys, sample, return (tokens, new keys)."""
+    carry, use = split_keys(keys)
+    return sample_tokens(logits, use, temps, topk), carry
+
+
 def sample_with_temperature(logits, key, temperature: float = 1.0):
+    """Single shared-key convenience wrapper over ``sample_tokens``."""
     if temperature <= 0:
         return greedy_sample(logits)
-    g = jax.random.gumbel(key, logits.shape)
-    return jnp.argmax(logits / temperature + g, axis=-1).astype(jnp.int32)[
-        :, None
-    ]
+    B = logits.shape[0]
+    keys = jax.random.split(key, B)
+    return sample_tokens(logits, keys,
+                         jnp.full((B,), temperature, jnp.float32))

@@ -1,0 +1,359 @@
+"""Speculative serving: chunked-verify parity vs sequential decode (fixed
+and paged, including a non-page-aligned rollback), greedy token-identity
+vs the target-only engines, page-pool accounting, per-request sampling
+determinism, and the QL4xx lint family with its constructor mirrors."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import QuantPolicy, preset, with_kv_cache
+from repro.models import build_model
+from repro.nn.module import unbox
+from repro.serve import steps as serve_steps
+from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+from repro.serve.kv_pages import PageGeometry
+from repro.serve.speculative import (SpeculativeServeEngine, _PagedSide,
+                                     greedy_accept, rejection_accept)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2-7b").reduced()
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def opt_setup():
+    """Tiny OPT proxy for the engine-level smoke tests (CI fast suite)."""
+    cfg = get_config("opt-tiny").replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv=4, head_dim=16, d_ff=256,
+        vocab=211)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(1)))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# Verify-pass parity: one chunked pass == k sequential decode steps
+# ---------------------------------------------------------------------------
+def test_chunk_step_matches_sequential_decode(setup):
+    cfg, model, params = setup
+    pol = QuantPolicy()
+    prompt = np.array([3, 1, 4, 1, 5, 9, 2], np.int32)
+    _, st0 = model.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                           pol, max_len=32)
+    toks = np.array([7, 2, 9, 4], np.int32)
+
+    st = st0
+    seq = []
+    for t in toks:
+        lg, st = model.decode_step(params, jnp.asarray([[t]], jnp.int32),
+                                   st, pol)
+        seq.append(np.asarray(lg[0]))
+
+    lgc, stc = model.chunk_step(params, jnp.asarray(toks[None]), st0,
+                                n_valid=jnp.asarray([4], jnp.int32),
+                                policy=pol)
+    np.testing.assert_allclose(np.asarray(lgc[0]), np.stack(seq),
+                               atol=2e-4, rtol=2e-4)
+    # position may be scalar (prefill state) or per-slot (engine state)
+    assert (np.asarray(stc.position).reshape(-1)[0]
+            == np.asarray(st.position).reshape(-1)[0])
+
+
+def test_chunk_step_invalid_tail_preserves_live_entries(setup):
+    """A chunk row with n_valid < S must not clobber cache slots the
+    invalid tail positions map to (a wrapped ring slot can hold a live
+    older position).  Scoring only the valid prefix must match feeding
+    exactly that prefix."""
+    cfg, model, params = setup
+    pol = QuantPolicy()
+    prompt = np.array([5, 9, 3], np.int32)
+    _, st0 = model.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                           pol, max_len=16)
+    toks = np.array([7, 2, 9, 4], np.int32)
+    # n_valid = 2: only [7, 2] are real; [9, 4] ride along as padding
+    lg_part, st_part = model.chunk_step(
+        params, jnp.asarray(toks[None]), st0,
+        n_valid=jnp.asarray([2], jnp.int32), policy=pol)
+    lg_ref, st_ref = model.chunk_step(
+        params, jnp.asarray(toks[None, :2]), st0,
+        n_valid=jnp.asarray([2], jnp.int32), policy=pol)
+    np.testing.assert_allclose(np.asarray(lg_part[0, :2]),
+                               np.asarray(lg_ref[0]), atol=2e-4, rtol=2e-4)
+    assert int(st_part.position[0]) == int(st_ref.position[0]) == 5
+    # continue decoding from both states: same trajectory
+    nxt = jnp.asarray([[11]], jnp.int32)
+    la, _ = model.decode_step(params, nxt, st_part, pol)
+    lb, _ = model.decode_step(params, nxt, st_ref, pol)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_paged_verify_matches_sequential(setup):
+    cfg, model, params = setup
+    pol = QuantPolicy()
+    geo = PageGeometry(page_size=4, n_pages=16, max_len=32, prefill_chunk=8)
+    prompts = [np.array([3, 1, 4, 1, 5], np.int32),       # ctx 5: unaligned
+               np.array([2, 7, 1, 8, 2, 8, 1], np.int32)]  # ctx 7: unaligned
+    chunk = np.array([[9, 2, 6, 5], [4, 4, 3, 3]], np.int32)
+    mask = np.ones(2, bool)
+    ctx = np.array([len(p) for p in prompts], np.int32)
+
+    def fresh_side():
+        side = _PagedSide(model, params, pol, n_slots=2, max_len=32,
+                          geometry=geo)
+        for s, p in enumerate(prompts):
+            side.reserve(s, len(p) + 8)
+            side.prefill_into(s, p)
+        side.set_positions(ctx)
+        return side
+
+    vlog = fresh_side().verify(chunk, mask)  # (2, 4, V) one chunked pass
+
+    side_seq = fresh_side()
+    for j in range(chunk.shape[1]):
+        lg = side_seq.decode(chunk[:, j:j + 1], mask)
+        np.testing.assert_allclose(vlog[:, j], lg, atol=2e-4, rtol=2e-4)
+
+
+def test_paged_rollback_non_page_aligned(setup):
+    """Verify overshoots, the engine rolls positions back to a NON-page-
+    aligned point, and decoding resumes — the stale KV the verify pass
+    wrote past the rollback point must be invisible."""
+    cfg, model, params = setup
+    pol = QuantPolicy()
+    geo = PageGeometry(page_size=4, n_pages=8, max_len=32, prefill_chunk=8)
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)  # ctx 5: mid-page
+    chunk = np.array([[9, 2, 6, 5]], np.int32)    # writes positions 5..8
+    mask = np.ones(1, bool)
+
+    side = _PagedSide(model, params, pol, n_slots=1, max_len=32,
+                      geometry=geo)
+    side.reserve(0, len(prompt) + 12)
+    side.prefill_into(0, prompt)
+    side.set_positions(np.array([5], np.int32))
+    side.verify(chunk, mask)
+    # accept 2 of the 4: commit [9, 2], roll back to position 7 (page 2
+    # boundary is at 8 — the rollback point is mid-page)
+    side.set_positions(np.array([7], np.int32))
+    lg = side.decode(np.array([[6]], np.int32), mask)
+
+    # reference: a side that only ever saw the committed stream
+    ref = _PagedSide(model, params, pol, n_slots=1, max_len=32,
+                     geometry=geo)
+    ref.reserve(0, len(prompt) + 12)
+    ref.prefill_into(0, np.concatenate([prompt, [9, 2]]).astype(np.int32))
+    ref.set_positions(np.array([7], np.int32))
+    lg_ref = ref.decode(np.array([[6]], np.int32), mask)
+    np.testing.assert_allclose(lg, lg_ref, atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Greedy speculative == target-only serving (the structural identity)
+# ---------------------------------------------------------------------------
+def _mixed_trace(cfg, max_new=5):
+    rng = np.random.RandomState(7)
+    return [Request(uid=i,
+                    prompt=rng.randint(0, cfg.vocab, n).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, n in enumerate((5, 11, 3, 17, 8, 2))]
+
+
+def test_speculative_greedy_identity_fixed(opt_setup):
+    cfg, model, params = opt_setup
+    target = preset("fp32")
+    ref = ServeEngine(model, params, n_slots=3, max_len=64, policy=target)
+    for r in _mixed_trace(cfg):
+        ref.submit(r)
+    ref_toks = {c.uid: c.tokens for c in ref.run_until_done()}
+
+    eng = SpeculativeServeEngine(
+        model, params, target_policy=target,
+        draft_policy=preset("w4a8_abfp"), draft_k=2, n_slots=3, max_len=64)
+    for r in _mixed_trace(cfg):
+        eng.submit(r)
+    done = eng.run_until_done()
+    assert {c.uid: c.tokens for c in done} == ref_toks
+    # the draft paid for itself and the metadata is coherent
+    st = eng.acceptance_stats()
+    assert st["accepted_per_target_step"] > 1.0
+    for c in done:
+        assert c.target_steps > 0
+        assert c.drafted_tokens == 2 * c.target_steps
+        assert 0 <= c.accepted_draft_tokens <= c.drafted_tokens
+
+
+def test_speculative_greedy_identity_paged(opt_setup):
+    cfg, model, params = opt_setup
+    target = preset("fp32")
+    ref = PagedServeEngine(model, params, n_slots=3, max_len=64,
+                           policy=target, page_size=4, prefill_chunk=8)
+    for r in _mixed_trace(cfg):
+        ref.submit(r)
+    ref_toks = {c.uid: c.tokens for c in ref.run_until_done()}
+
+    eng = SpeculativeServeEngine(
+        model, params, target_policy=target,
+        draft_policy=preset("w4a8_abfp"), draft_k=2, n_slots=3, max_len=64,
+        kv_cache="paged", page_size=4, prefill_chunk=8)
+    for r in _mixed_trace(cfg):
+        eng.submit(r)
+    assert {c.uid: c.tokens for c in eng.run_until_done()} == ref_toks
+    # zero leaked pages after drain, on BOTH pools
+    pg = eng.page_stats()
+    for pool_name in ("draft", "target"):
+        st = pg[pool_name]
+        assert st["pages_in_use"] == 0, pool_name
+        assert st["page_allocs"] == st["page_frees"] > 0, pool_name
+
+
+def test_speculative_temperature_is_seed_deterministic(opt_setup):
+    cfg, model, params = opt_setup
+
+    def run():
+        eng = SpeculativeServeEngine(
+            model, params, target_policy=preset("fp32"),
+            draft_policy=preset("w4a8_abfp"), draft_k=2, n_slots=2,
+            max_len=64)
+        rng = np.random.RandomState(3)
+        for i, n in enumerate((6, 4, 9)):
+            eng.submit(Request(
+                uid=i, prompt=rng.randint(0, cfg.vocab, n).astype(np.int32),
+                max_new_tokens=5, temperature=0.8, top_k=20, seed=100 + i))
+        return {c.uid: c.tokens for c in eng.run_until_done()}
+
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# Acceptance rules (pure-host logic)
+# ---------------------------------------------------------------------------
+def test_greedy_accept_prefix_rules():
+    V = 8
+    vlogits = np.full((4, V), -1.0)
+    vlogits[0, 2] = vlogits[1, 5] = vlogits[2, 1] = vlogits[3, 6] = 1.0
+    # full agreement: all 3 accepted + bonus
+    assert greedy_accept(np.array([2, 5, 1]), vlogits) == (3, 6)
+    # disagreement at index 1: one accepted, correction is target argmax
+    assert greedy_accept(np.array([2, 4, 1]), vlogits) == (1, 5)
+    # immediate disagreement
+    assert greedy_accept(np.array([7, 5, 1]), vlogits) == (0, 2)
+
+
+def test_rejection_accept_identical_distributions():
+    """Draft == target distribution: every draft must be accepted."""
+    rng = np.random.default_rng(0)
+    logits = np.random.RandomState(0).randn(4, 16)
+    drafts = np.array([3, 9, 1], np.int64)
+    a, nxt = rejection_accept(rng, drafts, logits[:3], logits,
+                              temperature=0.7, top_k=0)
+    assert a == 3
+    assert 0 <= nxt < 16
+
+
+# ---------------------------------------------------------------------------
+# Sampling helpers (the once-dead path, now load-bearing)
+# ---------------------------------------------------------------------------
+def test_sample_tokens_temperature_zero_is_argmax():
+    logits = jnp.asarray(np.random.RandomState(2).randn(5, 33))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(5, dtype=jnp.uint32))
+    out = serve_steps.sample_tokens(logits, keys,
+                                    jnp.zeros(5, jnp.float32),
+                                    jnp.zeros(5, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(serve_steps.greedy_sample(logits)))
+
+
+def test_top_k_filter_per_row():
+    logits = jnp.asarray(np.random.RandomState(4).randn(3, 16))
+    out = np.asarray(serve_steps.top_k_filter(logits,
+                                              jnp.asarray([2, 0, 16])))
+    assert (out[0] > serve_steps.NEG_INF / 2).sum() == 2
+    np.testing.assert_array_equal(out[1], np.asarray(logits[1]))  # k=0: off
+    np.testing.assert_array_equal(out[2], np.asarray(logits[2]))
+    # the survivors are exactly the row's top-2
+    top2 = set(np.argsort(np.asarray(logits[0]))[-2:])
+    assert set(np.where(out[0] > serve_steps.NEG_INF / 2)[0]) == top2
+
+
+def test_sample_step_is_key_deterministic():
+    logits = jnp.asarray(np.random.RandomState(5).randn(4, 50))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(4, dtype=jnp.uint32))
+    temps = jnp.full(4, 0.9, jnp.float32)
+    topk = jnp.zeros(4, jnp.int32)
+    t1, k1 = serve_steps.sample_step(logits, keys, temps, topk)
+    t2, k2 = serve_steps.sample_step(logits, keys, temps, topk)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+    # advancing the keys actually changes the stream (eventually)
+    t3, _ = serve_steps.sample_step(logits, k1, temps, topk)
+    assert not np.array_equal(np.asarray(t1), np.asarray(t3))
+
+
+# ---------------------------------------------------------------------------
+# QL4xx lint + constructor mirrors
+# ---------------------------------------------------------------------------
+def test_spec_lint_codes():
+    from repro.analysis.spec_lint import lint_speculative
+
+    cfg = get_config("qwen2-7b").reduced()
+    target = preset("fp32", n_layers=cfg.n_layers)
+    draft = preset("w4a8_abfp", n_layers=cfg.n_layers)
+
+    clean = lint_speculative(cfg, target,
+                             {"draft_policy": draft, "draft_k": 3})
+    assert not [d for d in clean if d.severity.name == "ERROR"]
+
+    codes = {d.code for d in lint_speculative(
+        cfg, target, {"draft_policy": draft, "draft_k": 0}, max_len=64)}
+    assert "QL404" in codes
+
+    codes = {d.code for d in lint_speculative(
+        cfg, target,
+        {"draft_policy": with_kv_cache(draft, "int8"), "draft_k": 3})}
+    assert "QL401" in codes
+
+    codes = {d.code for d in lint_speculative(
+        cfg, with_kv_cache(target, "int8"),
+        {"draft_policy": with_kv_cache(draft, "int8"), "draft_k": 3},
+        paged=True)}
+    assert "QL403" in codes and "QL401" not in codes
+
+    # draft not cheaper than the target: advisory, not an error
+    diags = lint_speculative(
+        cfg, preset("w4a8_abfp", n_layers=cfg.n_layers),
+        {"draft_policy": preset("w8a8_abfp", n_layers=cfg.n_layers),
+         "draft_k": 3})
+    assert any(d.code == "QL402" and d.severity.name == "WARNING"
+               for d in diags)
+
+
+def test_spec_engine_ctor_mirrors_lint(opt_setup):
+    cfg, model, params = opt_setup
+    target = preset("fp32")
+    draft = preset("w4a8_abfp")
+
+    with pytest.raises(ValueError, match="draft depth"):
+        SpeculativeServeEngine(model, params, target_policy=target,
+                               draft_policy=draft, draft_k=0, max_len=64)
+    with pytest.raises(ValueError, match="disagree on kv_cache storage"):
+        SpeculativeServeEngine(model, params, target_policy=target,
+                               draft_policy=with_kv_cache(draft, "int8"),
+                               draft_k=2, max_len=64)
+    with pytest.raises(ValueError, match="cannot store kv_cache"):
+        SpeculativeServeEngine(model, params,
+                               target_policy=with_kv_cache(target, "int8"),
+                               draft_policy=with_kv_cache(draft, "int8"),
+                               draft_k=2, max_len=64, kv_cache="paged")
+    with pytest.raises(ValueError, match="exceeds engine max_len"):
+        eng = SpeculativeServeEngine(model, params, target_policy=target,
+                                     draft_policy=draft, draft_k=4,
+                                     max_len=16)
+        eng.submit(Request(uid=0, prompt=np.zeros(8, np.int32),
+                           max_new_tokens=8))
