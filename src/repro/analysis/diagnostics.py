@@ -122,6 +122,13 @@ _register("QL403", Severity.ERROR, "quantized KV pages under paged "
                                    "speculative serving")
 _register("QL404", Severity.ERROR, "speculative draft depth out of range")
 
+# --- QL5xx: MoE expert serving ---------------------------------------------
+_register("QL501", Severity.WARNING, "expert cache at least as large as "
+                                     "the expert count")
+_register("QL502", Severity.ERROR, "per-expert rules on a non-MoE config")
+_register("QL503", Severity.WARNING, "hot-expert precision below "
+                                     "cold-expert precision")
+
 
 @dataclasses.dataclass(frozen=True)
 class Diagnostic:

@@ -128,6 +128,51 @@ def spec_draft_k_message(draft_k: int, max_len: int) -> str:
     )
 
 
+def expert_cache_capacity_message(capacity: int, n_experts: int) -> str:
+    """Expert cache at least as large as the expert count (QL501,
+    advisory): nothing ever evicts, so the compressed backing entries of
+    cached experts are pure overhead — serve dense-resident instead."""
+    return (
+        f"expert cache capacity {capacity} >= expert count {n_experts}: "
+        "every expert fits resident and the LRU never evicts, so the "
+        "compressed backing store is pure overhead — shrink the cache or "
+        "serve dense-resident"
+    )
+
+
+def expert_non_moe_message(what: str, arch: str) -> str:
+    """Expert-serving machinery pointed at a dense model (QL502 /
+    ExpertStore + engine ``expert_cache`` constructors): per-expert sites
+    only exist on MoE configs."""
+    return (
+        f"{what} requires an MoE config (n_experts > 0): {arch!r} has no "
+        "expert banks, so per-expert sites (…/experts.{e}) never resolve"
+    )
+
+
+def expert_precision_inversion_message(hot_bits: float,
+                                       cold_bits: float) -> str:
+    """Hot experts assigned fewer weight bits than cold ones (QL503,
+    advisory, computed from the roofline per-expert bit report)."""
+    return (
+        f"hot experts average {hot_bits:.1f} weight bits vs {cold_bits:.1f}"
+        " for cold experts: the most-routed experts carry LESS precision "
+        "than the rarely-routed ones — swap the assignment "
+        "(hot→INT8/FP8, cold→INT4)"
+    )
+
+
+def expert_cache_requires_compress_message() -> str:
+    """``expert_cache`` without compressed serving (engine constructors):
+    the cache swaps dense copies in for compressed backing entries; with
+    dense-resident params there is nothing to cache."""
+    return (
+        "expert_cache requires compress=True: the expert cache holds "
+        "decompressed copies of compressed backing entries, and "
+        "dense-resident serving has nothing to decompress"
+    )
+
+
 def flash_q_offset_message(S: int, T: int) -> str:
     """Causal flash attention with S != T needs an explicit q_offset
     (kernels.flash_attention raises this; the ref path defaults T - S)."""

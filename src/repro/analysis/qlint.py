@@ -11,7 +11,7 @@ from __future__ import annotations
 
 from repro.analysis import backend_lint, kernel_lint, policy_lint, recipe_lint
 from repro.analysis.diagnostics import Report
-from repro.core.policy import Policy, has_layer_rules
+from repro.core.policy import Policy, has_expert_rules, has_layer_rules
 from repro.launch.roofline import enumerate_matmul_sites
 
 
@@ -26,17 +26,22 @@ def site_universe(cfg) -> list:
     sites = [s for s, _K, _N, _m in enumerate_matmul_sites(cfg)]
     extra = []
     for s in sites:
+        parent = None
         if s.endswith("/q"):
             parent = s[: -len("/q")]
-            if parent not in sites and parent not in extra:
-                extra.append(parent)
+        elif "/experts." in s:
+            # MoE blocks resolve activation policies at the block site
+            # (blocks.3/ffn); per-expert rows only carry the weights
+            parent = s.rsplit("/experts.", 1)[0]
+        if parent and parent not in sites and parent not in extra:
+            extra.append(parent)
     return sites + extra
 
 
 def lint(cfg, policy: Policy, recipe=None, *, shape=None,
          compress: bool = False, prequant: bool = False,
          scan_layers: bool | None = None, model_name: str = "",
-         pages=None, speculative=None) -> Report:
+         pages=None, speculative=None, experts=None) -> Report:
     """Statically analyze a full launch tuple; returns a ``Report``.
 
     ``scan_layers`` defaults to the config's own setting; launchers that
@@ -46,7 +51,9 @@ def lint(cfg, policy: Policy, recipe=None, *, shape=None,
     serving launch (QL305-QL307), else None.  ``speculative`` is a dict
     (or duck-typed object) with ``draft_policy``/``draft_k`` when linting
     a speculative serving launch (QL4xx), else None — ``policy`` is then
-    the TARGET side.
+    the TARGET side.  ``experts`` is a dict (or duck-typed object) with
+    ``cache_capacity``/``hot_experts`` when linting expert-resident MoE
+    serving (QL5xx); per-expert policy rules are checked even without it.
     """
     ctx = {
         "arch": getattr(cfg, "name", "?"),
@@ -119,6 +126,13 @@ def lint(cfg, policy: Policy, recipe=None, *, shape=None,
         report.extend(spec_lint.lint_speculative(
             cfg, policy, speculative, paged=pages is not None,
             max_len=getattr(pages, "max_len", None)))
+
+    # --- QL5xx: MoE expert serving ------------------------------------------
+    if experts is not None or has_expert_rules(policy):
+        from repro.analysis import expert_lint
+
+        report.context["experts"] = experts is not None
+        report.extend(expert_lint.lint_experts(cfg, policy, experts))
     return report
 
 

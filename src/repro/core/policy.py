@@ -262,6 +262,19 @@ def has_layer_rules(policy: Policy) -> bool:
     )
 
 
+def has_expert_rules(policy: Policy) -> bool:
+    """True when rules address individual MoE experts (``experts.{e}``).
+
+    Expert-indexed patterns (``*/experts.3``) resolve at the runtime MoE
+    sub-sites ``{block}/ffn/experts.{e}``; they deliberately avoid the
+    word ``blocks`` so a layer-uniform per-expert map stays scan-
+    compatible (``has_layer_rules`` does not trip on them).
+    """
+    return has_site_rules(policy) and any(
+        "experts" in r.pattern for r in policy.rules
+    )
+
+
 def check_scan_compatible(policy: Policy, scan_layers: bool,
                           model_name: str = "") -> None:
     """Raise if layer-indexed rules are used with scan-over-layers.

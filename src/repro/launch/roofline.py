@@ -244,8 +244,12 @@ def enumerate_matmul_sites(cfg) -> list:
         out.append((f"blocks.{i}/attn/o", cfg.n_heads * hd, d, 1))
         n_wi = 2 if cfg.act in _GATED_ACTS else 1  # wi (+ wg)
         if cfg.family == "moe" and cfg.n_experts > 0:
-            out.append((f"blocks.{i}/ffn", d, f, n_wi * cfg.n_experts))
-            out.append((f"blocks.{i}/ffn", f, d, cfg.n_experts))
+            # one site per expert (the runtime per-expert weight contract
+            # in nn.moe / serving_transforms.expert_site), so per-expert
+            # precision maps account expert bits individually
+            for e in range(cfg.n_experts):
+                out.append((f"blocks.{i}/ffn/experts.{e}", d, f, n_wi))
+                out.append((f"blocks.{i}/ffn/experts.{e}", f, d, 1))
         else:
             out.append((f"blocks.{i}/ffn/wi", d, f, 1))
             if n_wi == 2:

@@ -34,6 +34,18 @@ def main() -> int:
                     "its resolved site rule (int codes + group scales; "
                     "INT4 packs two-per-byte) and contract the codes "
                     "directly — reports resident weight bytes")
+    ap.add_argument("--expert-cache", type=int, default=None,
+                    help="expert-resident MoE serving (requires --compress "
+                    "on an MoE arch): LRU capacity, in experts per MoE "
+                    "site, of decompressed-dense copies admitted by "
+                    "routing frequency; reports hit/miss + residency "
+                    "stats (E//4 is the useful starting point)")
+    ap.add_argument("--expert-precision", default="flat",
+                    choices=("flat", "auto"),
+                    help="'auto' probes routing frequencies and assigns "
+                    "per-expert weight formats (hot experts INT8, cold "
+                    "INT4) as */experts.{e} policy rules before serving; "
+                    "'flat' keeps the policy's single weight format")
     ap.add_argument("--n-slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--n-requests", type=int, default=8)
@@ -117,6 +129,19 @@ def main() -> int:
                                                  args.page_size))
         pages_geo = PageGeometry(page_size=args.page_size, n_pages=n_pages,
                                  max_len=args.max_len, prefill_chunk=chunk)
+    experts = None
+    if args.expert_cache is not None or args.expert_precision != "flat":
+        if args.speculate:
+            raise SystemExit(
+                "--expert-cache / --expert-precision are not supported "
+                "under --speculate (the draft/target pair shares no "
+                "expert store)")
+        if args.expert_cache is not None and not args.compress:
+            from repro.analysis.messages import \
+                expert_cache_requires_compress_message
+
+            raise SystemExit(expert_cache_requires_compress_message())
+        experts = {"cache_capacity": args.expert_cache}
     draft_policy = None
     speculative = None
     if args.speculate:
@@ -131,7 +156,7 @@ def main() -> int:
 
         preflight(cfg, policy, rec, compress=args.compress,
                   scan_layers=cfg.scan_layers, pages=pages_geo,
-                  speculative=speculative, where="serve")
+                  speculative=speculative, experts=experts, where="serve")
     model = build_model(cfg)
     params = unbox(model.init(jax.random.PRNGKey(args.seed)))
     if rec is not None:
@@ -164,6 +189,44 @@ def main() -> int:
             print(f"note: recipe {rec.name!r} produced a static q tree; "
                   "serving ignores it (dynamic-max fallback)",
                   file=sys.stderr)
+    expert_info = {}
+    if args.expert_precision == "auto":
+        from repro.serve.experts import (assign_expert_precision,
+                                         hot_experts, route_frequencies)
+
+        if not getattr(model, "is_moe", False):
+            # the QL502 gate blocks this before weights are built; mirror
+            # it here for --no-lint runs
+            from repro.analysis.messages import expert_non_moe_message
+
+            raise SystemExit(expert_non_moe_message(
+                "--expert-precision auto", cfg.name))
+        # offline assignment pass: probe routing frequencies on synthetic
+        # prompts (group-size-aligned), hottest E//4 experts -> INT8,
+        # the rest INT4, emitted as a serializable per-expert PolicyMap
+        prng = np.random.RandomState(args.seed + 2)
+        gt = max(1, cfg.moe_group_tokens)
+        probe = [prng.randint(0, cfg.vocab, (1, gt)).astype(np.int32)
+                 for _ in range(2)]
+        loads = route_frequencies(model, params, probe, policy=policy)
+        n_hot = max(1, cfg.n_experts // 4)
+        hot = hot_experts(loads, n_hot)
+        try:
+            policy = assign_expert_precision(loads, policy, n_hot=n_hot)
+        except ValueError as e:  # e.g. fp32 base: no weight rule to split
+            raise SystemExit(f"--expert-precision auto: {e}")
+        policy_name = policy.name
+        expert_info["expert_precision"] = {
+            "mode": "auto",
+            "hot_experts": [int(e) for e in hot],
+            "loads": [float(x) for x in np.asarray(loads).sum(axis=0)],
+        }
+        if not args.no_lint:
+            # re-gate with the assigned map + hot set (QL503 inversion)
+            preflight(cfg, policy, rec, compress=args.compress,
+                      scan_layers=cfg.scan_layers, pages=pages_geo,
+                      experts={"cache_capacity": args.expert_cache,
+                               "hot_experts": hot}, where="serve")
     if args.speculate:
         kw = {}
         if args.paged:
@@ -181,11 +244,13 @@ def main() -> int:
             policy=policy, compress=args.compress,
             page_size=pages_geo.page_size, n_pages=pages_geo.n_pages,
             prefill_chunk=pages_geo.prefill_chunk, kv=args.kv,
+            expert_cache=args.expert_cache,
         )
     else:
         engine = ServeEngine(
             model, params, n_slots=args.n_slots, max_len=args.max_len,
             policy=policy, compress=args.compress,
+            expert_cache=args.expert_cache,
         )
     compress_info = {}
     if args.compress:
@@ -260,6 +325,26 @@ def main() -> int:
                 weight_bytes_summary(engine.weight_bytes)
         if args.paged:
             spec_info["speculative"]["page_stats"] = engine.page_stats()
+    estats = None if args.speculate else engine.expert_stats()
+    if estats is not None:
+        expert_info["experts"] = {
+            "capacity": estats["capacity"],
+            "n_experts": estats["n_experts"],
+            "n_sites": estats["n_sites"],
+            "cached_experts": estats["cached_experts"],
+            "hits": estats["hits"],
+            "misses": estats["misses"],
+            "evictions": estats["evictions"],
+            "hit_rate": round(estats["hit_rate"], 4),
+            "store_bytes": estats["store_bytes"],
+            "cache_bytes": estats["cache_bytes"],
+            "resident_bytes": estats["resident_bytes"],
+            "hot_bytes": estats["hot_bytes"],
+            "cold_bytes": estats["cold_bytes"],
+            "dense_bytes": estats["dense_bytes"],
+            "resident_ratio": round(estats["ratio"], 4),
+            "sites": estats["sites"],
+        }
     paged_info = {}
     if args.paged and not args.speculate:
         stats = engine.page_stats()
@@ -287,6 +372,7 @@ def main() -> int:
                 "completions": completions,
                 **recipe_info,
                 **compress_info,
+                **expert_info,
                 **spec_info,
                 **paged_info,
             }

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.policy import (
+    Policy,
     QuantPolicy,
     check_scan_compatible,
     kv_cache_mode,
@@ -197,15 +198,16 @@ class TransformerLM:
 
     # --------------------------------------------------------------- blocks
     def _block_apply(self, bparams, x, positions, window, policy,
-                     q=None, name="block"):
+                     q=None, name="block", collect_load=False):
         c = self.cfg
         aux = jnp.zeros((), jnp.float32)
+        load = None
         getq = (lambda k: None) if q is None else q.get
         if self.is_ssm:
             h = _norm(c).apply(bparams["ln"], x)
             x = x + self._mamba(f"{name}/mamba").apply(
                 bparams["mamba"], h, policy, q=getq("mamba"))
-            return x, aux
+            return (x, aux, load) if collect_load else (x, aux)
         h = _norm(c).apply(bparams["ln1"], x)
         h = self._attention(f"{name}/attn").apply(
             bparams["attn"], h, positions=positions, policy=policy,
@@ -219,12 +221,13 @@ class TransformerLM:
             h, metrics = self._moe(f"{name}/ffn").apply(
                 bparams["ffn"], h, policy, q=getq("ffn"))
             aux = aux + metrics["moe_aux_loss"]
+            load = metrics["expert_load"]
         else:
             h = self._mlp(f"{name}/ffn").apply(bparams["ffn"], h, policy,
                                                q=getq("ffn"))
         if c.post_norms:
             h = _norm(c).apply(bparams["ln2_post"], h)
-        return x + h, aux
+        return (x + h, aux, load) if collect_load else (x + h, aux)
 
     def _remat(self, fn):
         c = self.cfg
@@ -279,6 +282,43 @@ class TransformerLM:
                                          name=f"blocks.{i}")
             aux = aux + a
         return x, aux
+
+    # -------------------------------------------------------- routing probe
+    def expert_loads(self, params, tokens, *,
+                     policy: Policy = QuantPolicy()) -> jnp.ndarray:
+        """Routed-token counts per expert: ``(n_layers, n_experts)`` f32.
+
+        A lightweight routing-frequency probe for the serve-side expert
+        store (``repro.serve.experts``): runs the block stack forward and
+        collects each MoE block's post-capacity ``expert_load`` metric.
+        Works under scan (loads stack as scan ys) and unrolled; ``tokens``
+        is ``(B, S)`` and loads sum over the whole batch.
+        """
+        c = self.cfg
+        if not self.is_moe:
+            raise TypeError(
+                f"expert_loads: {c.name!r} is not an MoE config")
+        check_scan_compatible(policy, c.scan_layers, c.name)
+        x, positions = self._embed_in(params, tokens)
+        windows = self.layer_windows(x.shape[1])
+        if c.scan_layers:
+            def body(xc, xs):
+                bp, w = xs
+                xn, _, load = self._block_apply(bp, xc, positions, w,
+                                                policy, collect_load=True)
+                return xn, load
+
+            _, loads = jax.lax.scan(body, x, (params["blocks"], windows))
+            return loads
+        wl = self.layer_windows_py()
+        loads = []
+        for i, bp in enumerate(params["blocks"]):
+            w = jnp.asarray(int(wl[i]), jnp.int32)
+            x, _, load = self._block_apply(bp, x, positions, w, policy,
+                                           name=f"blocks.{i}",
+                                           collect_load=True)
+            loads.append(load)
+        return jnp.stack(loads, axis=0)
 
     # ------------------------------------------------------------- embed in
     def _embed_in(self, params, tokens, prefix_embeds=None, pos_offset=0):

@@ -88,6 +88,15 @@ class Model:
         return self.inner.prefill(params, tokens, policy=policy,
                                   max_len=max_len, **kw)
 
+    @property
+    def is_moe(self) -> bool:
+        return getattr(self.inner, "is_moe", False)
+
+    def expert_loads(self, params, tokens, *, policy=QuantPolicy()):
+        """Routing-frequency probe: (n_layers, n_experts) routed-token
+        counts (MoE TransformerLM family only; raises TypeError else)."""
+        return self.inner.expert_loads(params, tokens, policy=policy)
+
     def decode_step(self, params, token, state, policy=QuantPolicy()):
         return self.inner.decode_step(params, token, state, policy=policy)
 

@@ -37,8 +37,15 @@ layout; exotic families (encdec/hybrid) only support flat policies here
 
 The tied embedding table is NOT touched: it feeds the input lookup too,
 and pre-quantizing it would change input embeddings (the runtime path only
-QDQs the readout matmul).  MoE expert banks store their weights as plain
-leaves (not ``kernel`` entries) and are likewise left dense.
+QDQs the readout matmul).
+
+MoE expert banks (the ``wi``/``wg``/``wo`` stacks next to a ``router``)
+are walked along their stacked expert axis: each expert resolves its OWN
+rule at ``{site}/experts.{e}`` (first-match-wins over the block-level
+pattern), so a mixed map can keep hot experts at INT8/FP8 while cold
+experts compress to INT4.  Heterogeneous per-expert storage lives in an
+``ExpertBank`` — the per-expert container the serve-side expert store
+(``repro.serve.experts``) caches into.
 """
 
 from __future__ import annotations
@@ -108,18 +115,96 @@ class CompressedKernel:
                 f" fmt={self.fmt_name}, packed={self.packed})")
 
 
-def _walk_kernels(params, fn):
+@jax.tree_util.register_pytree_node_class
+class ExpertBank:
+    """Per-expert entries for one stacked MoE expert kernel.
+
+    Replaces a dense ``(E, K, N)`` (or scan-stacked ``(L, E, K, N)``)
+    expert stack with a tuple of per-expert entries — each a dense slice
+    or a ``CompressedKernel`` — so experts can carry *different* storage
+    formats (hot INT8 / cold INT4) and the serve expert cache can swap an
+    individual expert for its decompressed-dense copy without touching
+    its neighbours.  The expert axis is END-RELATIVE at -3 so per-layer
+    slices under ``jax.lax.scan`` still line up (the same convention
+    ``CompressedKernel`` uses for its -2 contraction axis).
+    """
+
+    __slots__ = ("entries",)
+
+    def __init__(self, entries):
+        self.entries = tuple(entries)
+
+    def tree_flatten(self):
+        return self.entries, len(self.entries)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children)
+
+    @property
+    def n_experts(self) -> int:
+        return len(self.entries)
+
+    def dense(self, dtype=None):
+        """Stacked dense view ``(..., E, K, N)`` (XLA fuses the dequant)."""
+        mats = [decompress_kernel(e, dtype)
+                if isinstance(e, CompressedKernel)
+                else (e if dtype is None else e.astype(dtype))
+                for e in self.entries]
+        return jnp.stack(mats, axis=mats[0].ndim - 2)
+
+    def replace_entry(self, e: int, value) -> "ExpertBank":
+        entries = list(self.entries)
+        entries[e] = value
+        return ExpertBank(entries)
+
+    def __repr__(self):
+        n_c = sum(isinstance(e, CompressedKernel) for e in self.entries)
+        return (f"ExpertBank(n_experts={self.n_experts}, "
+                f"compressed={n_c}, dense={self.n_experts - n_c})")
+
+
+def entry_bytes(entry) -> int:
+    """Resident bytes of one weight entry (dense array or codes+scales)."""
+    if isinstance(entry, CompressedKernel):
+        return _leaf_bytes(entry.codes) + _leaf_bytes(entry.scale)
+    return _leaf_bytes(entry)
+
+
+def is_expert_bank(x) -> bool:
+    return isinstance(x, ExpertBank)
+
+
+# MoE param sub-dicts are recognised structurally: the expert stacks sit
+# next to their router.  Keys here are the ONLY non-'kernel' leaves the
+# walks transform.
+_EXPERT_KEYS = ("wi", "wg", "wo")
+
+
+def _is_moe_bank(node) -> bool:
+    return (isinstance(node, dict) and "router" in node
+            and "wi" in node and "wo" in node)
+
+
+def _walk_kernels(params, fn, expert_fn=None):
     """Apply ``fn(site, kernel_leaf)`` to every 'kernel' entry; keep
     structure.  ``site`` follows the runtime site-address contract (see
-    module docstring)."""
+    module docstring).  When ``expert_fn`` is given, MoE expert stacks are
+    visited too as ``expert_fn(site, kind, stack)`` with ``kind`` one of
+    ``wi``/``wg``/``wo`` and ``site`` the block-level address (e.g.
+    ``blocks.0/ffn``); otherwise they pass through untouched."""
 
     def rec(node, path):
         if isinstance(node, dict):
             out = {}
+            bank = _is_moe_bank(node)
             for k, v in node.items():
-                if k == "kernel" and (hasattr(v, "ndim")
-                                      or isinstance(v, (tuple,
-                                                        CompressedKernel))):
+                if bank and k in _EXPERT_KEYS:
+                    out[k] = (expert_fn("/".join(path), k, v)
+                              if expert_fn is not None else v)
+                elif k == "kernel" and (hasattr(v, "ndim")
+                                        or isinstance(v, (tuple,
+                                                          CompressedKernel))):
                     out[k] = fn("/".join(path), v)
                 elif (k == "blocks" and isinstance(v, (list, tuple))
                         and not hasattr(v, "ndim")):
@@ -145,7 +230,24 @@ def _walk_kernels(params, fn):
 
 
 def _site_weight(policy: Policy, site: str) -> TensorQuant | None:
-    return resolve_policy(policy, site).weight
+    p = resolve_policy(policy, site)
+    return p.weight if p.enabled else None
+
+
+def expert_site(site: str, e: int) -> str:
+    """Site address of expert ``e`` inside the MoE block at ``site``.
+
+    Matches the runtime contract in ``nn.moe``: ``blocks.0/ffn/experts.3``
+    unrolled, ``block/ffn/experts.3`` under scan (expert-indexed patterns
+    like ``*/experts.3`` avoid the word ``blocks`` on purpose, so they
+    stay scan-compatible — `has_layer_rules` does not trip on them).
+    """
+    return f"{site}/experts.{e}"
+
+
+def _expert_weights(policy: Policy, site: str, n_experts: int):
+    return [_site_weight(policy, expert_site(site, e))
+            for e in range(n_experts)]
 
 
 # Param-tree top-level keys whose runtime site addresses do NOT follow the
@@ -175,6 +277,8 @@ def prequantize_weights(params, policy: Policy):
 
     fp32-rule sites are left untouched; all scalers ``qdq_weight`` supports
     (abfp / channel_max / dynamic_max) round-trip exactly at serving time.
+    MoE expert stacks QDQ per-expert against their ``experts.{e}`` rules
+    and stay stacked-dense.
     """
     _check_site_rules_supported(params, policy, "prequantize_weights")
 
@@ -184,7 +288,22 @@ def prequantize_weights(params, policy: Policy):
             return w
         return qdq_weight(w, tq, contract_axis=w.ndim - 2).astype(w.dtype)
 
-    return _walk_kernels(params, one)
+    def one_bank(site, kind, w):
+        if isinstance(w, ExpertBank):
+            return w
+        e_axis = w.ndim - 3
+        tqs = _expert_weights(policy, site, w.shape[e_axis])
+        if all(tq is None for tq in tqs):
+            return w
+        cols = []
+        for e, tq in enumerate(tqs):
+            we = jnp.take(w, e, axis=e_axis)
+            if tq is not None:
+                we = qdq_weight(we, tq, contract_axis=we.ndim - 2)
+            cols.append(we.astype(w.dtype))
+        return jnp.stack(cols, axis=e_axis)
+
+    return _walk_kernels(params, one, expert_fn=one_bank)
 
 
 def serving_policy(policy: Policy) -> Policy:
@@ -272,14 +391,13 @@ def compress_weights(params, policy: Policy):
         consumed directly by the ``compressed`` execution backend;
       * float-format rule (e.g. FP8-E4M3) — QDQ'd offline, stays dense;
       * fp32 (disabled) rule — untouched.
-    Pair with ``serving_policy(policy)`` at runtime.
+    MoE expert stacks become ``ExpertBank``s of per-expert entries, each
+    resolved at ``{site}/experts.{e}`` — a fully fp32 bank stays a plain
+    dense stack.  Pair with ``serving_policy(policy)`` at runtime.
     """
     _check_site_rules_supported(params, policy, "compress_weights")
 
-    def one(site, w):
-        if isinstance(w, CompressedKernel):
-            return w
-        tq = _site_weight(policy, site)
+    def _one_entry(w, tq):
         if tq is None:
             return w
         if isinstance(tq.fmt, IntFormat) and tq.scaler in ("abfp",
@@ -289,7 +407,24 @@ def compress_weights(params, policy: Policy):
         # prequantize offline so serving still matches the QDQ simulation
         return qdq_weight(w, tq, contract_axis=w.ndim - 2).astype(w.dtype)
 
-    return _walk_kernels(params, one)
+    def one(site, w):
+        if isinstance(w, CompressedKernel):
+            return w
+        return _one_entry(w, _site_weight(policy, site))
+
+    def one_bank(site, kind, w):
+        if isinstance(w, ExpertBank):
+            return w
+        e_axis = w.ndim - 3
+        tqs = _expert_weights(policy, site, w.shape[e_axis])
+        if all(tq is None for tq in tqs):
+            return w  # fully fp32 bank: stays a plain dense stack
+        return ExpertBank([
+            _one_entry(jnp.take(w, e, axis=e_axis), tq)
+            for e, tq in enumerate(tqs)
+        ])
+
+    return _walk_kernels(params, one, expert_fn=one_bank)
 
 
 def compress_axes(axes_tree, compressed_sds_tree):
@@ -316,6 +451,12 @@ def compress_axes(axes_tree, compressed_sds_tree):
                 dtype=sds_node.dtype, fmt_name=sds_node.fmt_name,
                 packed=sds_node.packed,
             )
+        if isinstance(sds_node, ExpertBank):
+            # the expert axis is consumed by the bank; each entry keeps the
+            # per-expert kernel axes (contract, out)
+            axes = ax_node
+            sub = tuple(axes[:-3]) + tuple(axes[-2:])
+            return ExpertBank([rec(sub, e) for e in sds_node.entries])
         if isinstance(ax_node, dict):
             return {k: rec(ax_node[k], sds_node[k]) for k in ax_node}
         if isinstance(ax_node, (list, tuple)) and not _is_axes(ax_node):
@@ -365,7 +506,9 @@ def weight_bytes_report(dense_params, served_params) -> dict:
     bytes each representation keeps resident in HBM — the cost-model
     counterpart of ``launch.roofline.policy_bits_report`` (bits are the
     budget; this is what the storage actually spends, scale overhead
-    included).
+    included).  MoE expert stacks report one row per expert site
+    (``{site}/experts.{e}``, the wi/wg/wo kernels of one expert summed),
+    so per-expert precision shows up per expert.
     """
     sites = []
 
@@ -375,7 +518,11 @@ def weight_bytes_report(dense_params, served_params) -> dict:
         dense_by_site[site] = w
         return w
 
-    _walk_kernels(dense_params, record)
+    def record_bank(site, kind, w):
+        dense_by_site[(site, kind)] = w
+        return w
+
+    _walk_kernels(dense_params, record, expert_fn=record_bank)
 
     def one(site, w):
         dense_w = dense_by_site[site]
@@ -394,7 +541,30 @@ def weight_bytes_report(dense_params, served_params) -> dict:
         })
         return w
 
-    _walk_kernels(served_params, one)
+    expert_rows = {}  # expert site -> row (wi/wg/wo summed)
+
+    def one_bank(site, kind, w):
+        dense_w = dense_by_site[(site, kind)]
+        entries = (list(w.entries) if isinstance(w, ExpertBank)
+                   else [jnp.take(w, e, axis=w.ndim - 3)
+                         for e in range(w.shape[w.ndim - 3])])
+        per_dense = _leaf_bytes(dense_w) // len(entries)
+        for e, entry in enumerate(entries):
+            if isinstance(entry, CompressedKernel):
+                k_, fmt = "compressed", entry.fmt_name + (
+                    "_packed" if entry.packed else "")
+            else:
+                k_, fmt = "dense", str(entry.dtype)
+            row = expert_rows.setdefault(expert_site(site, e), {
+                "site": expert_site(site, e), "kind": k_, "fmt": fmt,
+                "dense_bytes": 0, "resident_bytes": 0,
+            })
+            row["dense_bytes"] += per_dense
+            row["resident_bytes"] += entry_bytes(entry)
+        return w
+
+    _walk_kernels(served_params, one, expert_fn=one_bank)
+    sites.extend(expert_rows.values())
     dense_total = sum(s["dense_bytes"] for s in sites)
     resident_total = sum(s["resident_bytes"] for s in sites)
     return {

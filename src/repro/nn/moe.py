@@ -18,7 +18,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import Policy, resolve_policy
+from repro.core.policy import Policy, has_expert_rules, resolve_policy
 from repro.core.simulate import qdq_activation, qdq_weight
 from repro.dist import sharding as shd
 from repro.nn.ffn import _ACTS, GATED
@@ -79,11 +79,17 @@ class MoE:
         self, params: dict, x: jnp.ndarray, policy: Policy,
         q: dict | None = None,
     ) -> tuple[jnp.ndarray, dict]:
-        """Returns (output, metrics) — metrics carries the aux load loss.
+        """Returns (output, metrics) — metrics carries the aux load loss
+        and the per-expert routed-token load (``expert_load``, shape (E,)).
 
-        The expert matmuls share one site address (``self.name``): a
-        PolicyMap resolves here once for the whole expert block.
+        Activations resolve once at the block site (``self.name``).  The
+        expert *weights* additionally honor per-expert sub-sites
+        ``{self.name}/experts.{e}``: expert-indexed map rules QDQ each
+        expert against its own rule, and offline-compressed ``ExpertBank``
+        params are consumed per entry — cache-resident (dense) entries
+        skip the dequant entirely.
         """
+        pmap = policy
         policy = resolve_policy(policy, self.name)
         B, S, D = x.shape
         E, K = self.n_experts, self.top_k
@@ -139,11 +145,32 @@ class MoE:
         xin_q = qdq_activation(xin, policy.input if policy.enabled else None,
                                axis=-1, site=self.name + "/in")
 
+        per_expert = has_expert_rules(pmap)
+
+        def expert_weights(w):
+            # serving-transform storage arrives as pytree leaves; import
+            # lazily to keep nn -> models import-order-free
+            from repro.models.serving_transforms import (
+                CompressedKernel, ExpertBank, decompress_kernel)
+            if isinstance(w, ExpertBank):
+                # offline-compressed store: each entry dequants per its own
+                # stored format; dense (cache-resident) entries pass through
+                return w.dense(jnp.float32)
+            if isinstance(w, CompressedKernel):
+                return decompress_kernel(w, jnp.float32)
+            if per_expert:
+                cols = []
+                for e in range(E):
+                    pe = resolve_policy(pmap, f"{self.name}/experts.{e}")
+                    tq = pe.weight if pe.enabled else None
+                    cols.append(qdq_weight(w[e], tq, contract_axis=0))
+                return jnp.stack(cols, axis=0)
+            return qdq_weight(w, policy.weight if policy.enabled else None,
+                              contract_axis=1)
+
         def expert_mm(h, w, spec):
-            wq = qdq_weight(w, policy.weight if policy.enabled else None,
-                            contract_axis=1)
             return jnp.einsum(spec, h.astype(jnp.float32),
-                              wq.astype(jnp.float32))
+                              expert_weights(w).astype(jnp.float32))
 
         hi = expert_mm(xin_q, params["wi"], "gecd,edf->gecf")
         if self.gated:
@@ -161,7 +188,8 @@ class MoE:
         y = jnp.einsum("gtec,gecd->gtd", combine, eout)
         y = y.reshape(B, S, D).astype(jnp.dtype(self.dtype))
         y = shd.constrain(y, ("batch", "seq_res", "embed"))
-        metrics = {"moe_aux_loss": aux_loss}
+        metrics = {"moe_aux_loss": aux_loss,
+                   "expert_load": fill.sum(axis=0).astype(jnp.float32)}
         return y, metrics
 
     def dtype_np(self):

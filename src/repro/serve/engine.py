@@ -37,6 +37,15 @@ engine construction against each kernel's *resolved* site rule
 drops its weight quantizers; qmatmul's ``compressed`` execution backend
 then contracts the stored codes directly, so decode never dequantizes a
 kernel.  ``engine.weight_bytes`` records the resident-byte accounting.
+
+Expert-resident MoE serving: when ``compress=True`` meets an MoE model,
+the per-expert compressed banks are collected into a
+``serve.experts.ExpertStore`` — an LRU (``expert_cache`` capacity) of
+decompressed-dense expert copies fed by a routing-frequency probe at
+admission.  ``refresh_experts()`` swaps cache-resident experts into the
+params (skipping their per-step dequant); cache state is pure
+representation, so hits/misses/refreshes never change tokens.
+``expert_stats()`` reports hit/miss + residency split hot/cold.
 """
 
 from __future__ import annotations
@@ -114,6 +123,7 @@ class _EngineBase:
     policy: Policy
     n_slots: int
     max_len: int
+    expert_store = None  # set by MoE compressed construction
 
     def _init_common(self, n_slots: int):
         self.req: list[Request | None] = [None] * n_slots
@@ -121,6 +131,77 @@ class _EngineBase:
         self.queue: list[Request] = []
         self.done: list[Completion] = []
         self.ticks = 0
+        self._expert_probe_cache = {}  # jitted expert_loads per padded len
+
+    # ------------------------------------------------------- expert store
+    def _build_expert_store(self, served, expert_cache: int | None,
+                            compress: bool) -> None:
+        """Validate the ``expert_cache`` request and, when compressed
+        serving meets an MoE model, collect the expert banks into an
+        ``ExpertStore`` (per-expert backing entries + LRU caches)."""
+        if expert_cache is not None:
+            from repro.analysis.messages import (
+                expert_cache_requires_compress_message,
+                expert_non_moe_message)
+
+            if not compress:
+                raise ValueError(expert_cache_requires_compress_message())
+            if not getattr(self.model, "is_moe", False):
+                raise ValueError(expert_non_moe_message(
+                    "an expert cache",
+                    getattr(self.model.cfg, "name", "?")))
+        if compress and getattr(self.model, "is_moe", False):
+            from repro.serve.experts import ExpertStore
+
+            try:
+                self.expert_store = ExpertStore(
+                    served, capacity=int(expert_cache or 0),
+                    model_name=getattr(self.model.cfg, "name", ""))
+            except ValueError:
+                # float-rule banks stayed plain dense stacks — nothing
+                # to store; serving is dense-resident and trivially
+                # token-identical
+                self.expert_store = None
+
+    def _observe_experts(self, prompt) -> None:
+        """Probe routing loads for an admitted prompt and feed the store.
+
+        The probe pads the prompt to a multiple of the MoE group size
+        (the dispatch asserts ``(B*S) % group_tokens == 0``) — pad-token
+        routes only perturb the frequency counters, and counters/cache
+        state never enter the compute path, so tokens are unaffected."""
+        if self.expert_store is None:
+            return
+        p = np.asarray(prompt, np.int32).reshape(-1)
+        gt = max(1, getattr(self.model.cfg, "moe_group_tokens", 1))
+        padded = max(gt, -(-len(p) // gt) * gt)
+        if padded != len(p):
+            p = np.concatenate([p, np.zeros(padded - len(p), np.int32)])
+        fn = self._expert_probe_cache.get(padded)
+        if fn is None:
+            fn = jax.jit(lambda params, tokens: self.model.expert_loads(
+                params, tokens, policy=self.policy))
+            self._expert_probe_cache[padded] = fn
+        loads = np.asarray(jax.device_get(
+            fn(self.params, jnp.asarray(p[None]))))
+        self.expert_store.observe(loads)
+
+    def refresh_experts(self) -> None:
+        """Swap cache-resident experts into the serving params (and
+        evicted ones back to their compressed entries).  One recompile on
+        the next step; tokens are unchanged by construction — the cached
+        dense copies equal the dequantized backing entries bit-for-bit."""
+        if self.expert_store is None:
+            raise ValueError(
+                "refresh_experts: engine has no expert store (construct "
+                "with compress=True on an MoE model)")
+        self.params = self.expert_store.materialize(self.params)
+
+    def expert_stats(self) -> dict | None:
+        """The store's residency/traffic report, or None when expert-
+        resident serving is inactive."""
+        return (None if self.expert_store is None
+                else self.expert_store.stats())
 
     def submit(self, req: Request):
         need = len(req.prompt) + req.max_new_tokens
@@ -192,6 +273,7 @@ class ServeEngine(_EngineBase):
         policy: Policy = QuantPolicy(),
         prefill_bucket: int = 64,
         compress: bool = False,
+        expert_cache: int | None = None,
     ):
         self.model = model
         mode = kv_cache_mode(policy)  # engine-global cache storage: fail
@@ -206,8 +288,11 @@ class ServeEngine(_EngineBase):
 
             served = st.compress_weights(params, policy)
             self.weight_bytes = st.weight_bytes_report(params, served)
+            self._build_expert_store(served, expert_cache, compress)
             params = served
             policy = st.serving_policy(policy)
+        else:
+            self._build_expert_store(None, expert_cache, compress)
         self.params = params
         self.policy = policy
         self.n_slots = n_slots
@@ -320,6 +405,7 @@ class ServeEngine(_EngineBase):
             if self.active[slot] or not self.queue:
                 continue
             req = self.queue.pop(0)
+            self._observe_experts(req.prompt)
             S = len(req.prompt)
             padded = self._bucketed(S)
             tokens = np.zeros((1, padded), np.int32)
@@ -408,6 +494,7 @@ class PagedServeEngine(_EngineBase):
         prefill_chunk: int | None = None,
         kv: str = "auto",
         compress: bool = False,
+        expert_cache: int | None = None,
     ):
         self.model = model
         mode = kv_cache_mode(policy)
@@ -433,8 +520,11 @@ class PagedServeEngine(_EngineBase):
 
             served = st.compress_weights(params, policy)
             self.weight_bytes = st.weight_bytes_report(params, served)
+            self._build_expert_store(served, expert_cache, compress)
             params = served
             policy = st.serving_policy(policy)
+        else:
+            self._build_expert_store(None, expert_cache, compress)
         self.params = params
         self.policy = policy
         self.n_slots = n_slots
@@ -486,6 +576,7 @@ class PagedServeEngine(_EngineBase):
             if pages is None:
                 return  # FCFS: the head waits for pages; no overtaking
             self.queue.pop(0)
+            self._observe_experts(req.prompt)
             slot = free[0]
             self.slot_pages[slot] = pages
             self.table[slot, :] = -1

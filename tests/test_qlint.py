@@ -316,6 +316,49 @@ def test_preflight_blocks_and_passes():
     preflight(cfg, preset("w4a8_abfp"), out=buf)  # clean: no raise
 
 
+# ------------------------------------------------------ QL5xx: MoE experts
+def test_ql502_expert_rules_on_dense_config():
+    cfg = get_config("qwen2-7b").reduced()
+    pm = PolicyMap(name="exp", rules=(
+        PolicyRule("*/experts.0", W8.replace(name="hot")),
+        PolicyRule("*/experts.*", W4.replace(name="cold")),
+    ), default=W4)
+    r = lint(cfg, pm)
+    assert any(d.code == "QL502" for d in r.errors)
+
+
+def test_expert_rules_on_moe_config_are_reachable():
+    """Per-expert rules resolve against the roofline's experts.{e} site
+    rows: no QL502, and no QL002 dead-rule warning for a rule that
+    targets a real expert index."""
+    from repro.serve.experts import expert_precision_map
+
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    pm = expert_precision_map(preset("w4a8_abfp"), [0])
+    r = lint(cfg, pm)
+    assert not r.has("QL502")
+    dead = [d for d in r.warnings if d.code == "QL002"
+            and "experts" in d.message]
+    assert not dead
+
+
+def test_ql503_precision_inversion():
+    from repro.serve.experts import expert_precision_map
+
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    base = preset("w4a8_abfp")
+    inverted = expert_precision_map(base, [0], hot_fmt="int4",
+                                    cold_fmt="int8")
+    r = lint(cfg, inverted, experts={"hot_experts": [0]})
+    ql503 = [d for d in r.warnings if d.code == "QL503"]
+    assert ql503 and r.ok  # advisory, still launchable
+    assert "LESS precision" in ql503[0].message
+    # the non-inverted assignment is clean
+    good = expert_precision_map(base, [0])
+    r2 = lint(cfg, good, experts={"hot_experts": [0]})
+    assert not r2.has("QL503")
+
+
 # ------------------------------------------------- shipped grid lints clean
 def test_registered_grid_lints_clean():
     """Every shipped config x preset x recipe combination must produce
