@@ -656,6 +656,104 @@ def serving_table(rep: C.Report, steps: int):
               f"fp16_equiv={kvb['kv_fp16_equiv_bytes']}")
 
 
+# --------------------------------------- compressed-domain attention
+def attn_table(rep: C.Report, steps: int):
+    """Compressed-domain flash attention: decode throughput + attention
+    HBM read bytes per backend x page format.
+
+    The serving engines' decode attention can contract the paged KV three
+    ways: ``ref`` (gather -> dequantize -> jnp reference — the QDQ-sim
+    baseline), ``fused`` (dense Pallas kernel; decode steps stay on the
+    reference path, the row is the control), and ``compressed`` (the
+    quantized flash kernel consumes stored int8/fp8 codes + per-(page,
+    head) scales directly — the dense K/V is never materialized in HBM).
+    Rows record tok/s and the attention read accounting
+    (``kv_pages.attention_read_bytes``) captured mid-flight; claims:
+
+      * compressed serving is TOKEN-IDENTICAL to the ref backend on the
+        same trace and the same page storage (int8 and fp8), and
+      * at token identity the compressed read path moves <= 0.5x the
+        dense-fp16-equivalent bytes (codes vs 2-byte entries; page scales
+        amortize to metadata) — the QDQ-sim path reads the codes AND a
+        dense round-trip, so compressed is also strictly below it.
+
+    tok/s on CPU runs the kernel under the Pallas interpreter — the
+    wall-clock column is context, not the claim (EXPERIMENTS.md
+    §Compressed attention).
+    """
+    import time
+
+    from repro.core.policy import with_attn_backend, with_kv_cache
+    from repro.serve.engine import PagedServeEngine, Request
+
+    name = "opt-proxy-s"
+    cfg, model, params, _ = C.train_proxy(name, steps)
+    rng = np.random.RandomState(31)
+    prompts = [
+        rng.randint(0, cfg.vocab, int(rng.randint(4, 12))).astype(np.int32)
+        for _ in range(6)
+    ]
+
+    def run(policy, kv, backend):
+        pol = policy if backend == "auto" else with_attn_backend(policy,
+                                                                 backend)
+        eng = PagedServeEngine(model, params, n_slots=3, max_len=96,
+                               policy=pol, page_size=8, prefill_chunk=16,
+                               kv=kv)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=8))
+        # occupancy-dependent read accounting: capture MID-FLIGHT (the
+        # drained pool reads 0 bytes)
+        for _ in range(3):
+            eng.tick()
+        kvb = eng.kv_bytes()
+        t0 = time.perf_counter()
+        toks = {c.uid: c.tokens for c in eng.run_until_done()}
+        dt = time.perf_counter() - t0
+        tps = sum(len(t) for t in toks.values()) / dt
+        return toks, tps, kvb
+
+    pol = preset("w4a8_abfp", n_layers=cfg.n_layers)
+    for kv in ("fp", "int8", "fp8"):
+        base = with_kv_cache(pol, kv) if kv != "fp" else pol
+        ref_run = run(base, kv, "ref")
+        ref_toks = ref_run[0]
+        backends = ["ref", "fused"] + (["compressed"] if kv != "fp" else [])
+        for backend in backends:
+            toks, tps, kvb = ref_run if backend == "ref" \
+                else run(base, kv, backend)
+            match = toks == ref_toks
+            rep.row("attn_table", model=name, policy="w4a8_abfp", kv=kv,
+                    backend=backend, tokens_match=match,
+                    tok_s=round(tps, 1),
+                    attn_kv_read_bytes=kvb["attn_kv_read_bytes"],
+                    attn_code_read_bytes=kvb["attn_code_read_bytes"],
+                    attn_scale_read_bytes=kvb["attn_scale_read_bytes"],
+                    attn_fp16_equiv_read_bytes=kvb[
+                        "attn_fp16_equiv_read_bytes"],
+                    attn_vs_fp16_read_ratio=kvb.get(
+                        "attn_vs_fp16_read_ratio"))
+            if backend == "compressed":
+                rep.claim("attn_table",
+                          f"{name}/{kv}: compressed attention emits the "
+                          "ref backend's tokens",
+                          match,
+                          f"{sum(len(t) for t in toks.values())} tokens, "
+                          f"{len(prompts)} requests")
+                ok = (match and kvb["attn_code_read_bytes"] > 0
+                      and kvb["attn_code_read_bytes"]
+                      <= 0.5 * kvb["attn_fp16_equiv_read_bytes"])
+                rep.claim("attn_table",
+                          f"{name}/{kv}: at token identity the compressed "
+                          "read path moves <= 0.5x the dense-fp16-"
+                          "equivalent bytes",
+                          ok,
+                          f"codes={kvb['attn_code_read_bytes']} "
+                          f"scales={kvb['attn_scale_read_bytes']} "
+                          f"fp16_equiv="
+                          f"{kvb['attn_fp16_equiv_read_bytes']}")
+
+
 def spec_table(rep: C.Report, steps: int):
     """Self-speculative serving: a compressed low-precision draft of the
     SAME weights proposes draft_k tokens per round; the fp32 target scores
@@ -890,5 +988,6 @@ ALL = {
     "vit_table": vit_table, "mixed_table": mixed_table,
     "methods_table": methods_table, "serving_table": serving_table,
     "spec_table": spec_table, "moe_table": moe_table,
+    "attn_table": attn_table,
     "output_quant": output_quant, "int8_native": int8_native,
 }

@@ -12,6 +12,12 @@ Every check the static analyzer runs emits ``Diagnostic`` instances whose
                                         legality, packing, backend fallback)
   ``QL3xx``  kernel / launch           (int32 accumulator bounds, block
                                         divisibility, VMEM footprint)
+  ``QL4xx``  speculative serving       (draft/target storage agreement,
+                                        draft depth/width sanity)
+  ``QL5xx``  MoE expert serving        (cache sizing, per-expert rules,
+                                        precision assignment)
+  ``QL6xx``  attention backend         (compressed-domain dispatch vs KV
+                                        storage, silent kernel fallback)
 
 Severity semantics mirror the pre-flight gate: ``error`` means the launch
 would raise or silently mis-serve (the gate refuses to run), ``warning``
@@ -128,6 +134,14 @@ _register("QL501", Severity.WARNING, "expert cache at least as large as "
 _register("QL502", Severity.ERROR, "per-expert rules on a non-MoE config")
 _register("QL503", Severity.WARNING, "hot-expert precision below "
                                      "cold-expert precision")
+
+# --- QL6xx: attention backend ----------------------------------------------
+_register("QL601", Severity.ERROR, "compressed attention backend over "
+                                   "dense fp KV storage")
+_register("QL602", Severity.WARNING, "requested attention kernel silently "
+                                     "degrades to a reference-speed path")
+_register("QL603", Severity.ERROR, "fp8 KV storage on the fixed-slot "
+                                   "engine")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -173,6 +173,36 @@ def expert_cache_requires_compress_message() -> str:
     )
 
 
+def compressed_attn_storage_message(mode: str, where: str) -> str:
+    """Compressed attention over fp KV storage (QL601 / nn.attention
+    decode paths): the backend contracts stored codes — dense fp storage
+    has none to contract."""
+    return (
+        f"attention backend 'compressed' needs quantized KV storage, but "
+        f"{where} holds kv_cache={mode!r} (dense fp) — store int8/fp8 "
+        "entries (with_kv_cache) or select the 'ref'/'fused' backend"
+    )
+
+
+def flash_fallback_message(backend: str, reason: str) -> str:
+    """Flash/compressed attention request that silently degrades to a
+    reference-speed path (QL602, advisory — the runtime falls back
+    without a signal; this is that signal)."""
+    return (
+        f"attention backend {backend!r} silently degrades to a "
+        f"reference-speed path: {reason}"
+    )
+
+
+def fp8_fixed_slot_message() -> str:
+    """fp8 KV pages on the fixed-slot engine (QL603 / serve.ServeEngine
+    constructor)."""
+    return (
+        "kv_cache='fp8' is paged-only (the ring-buffer cache has no fp8 "
+        "storage); serve this policy with PagedServeEngine"
+    )
+
+
 def flash_q_offset_message(S: int, T: int) -> str:
     """Causal flash attention with S != T needs an explicit q_offset
     (kernels.flash_attention raises this; the ref path defaults T - S)."""

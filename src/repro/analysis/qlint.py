@@ -41,7 +41,7 @@ def site_universe(cfg) -> list:
 def lint(cfg, policy: Policy, recipe=None, *, shape=None,
          compress: bool = False, prequant: bool = False,
          scan_layers: bool | None = None, model_name: str = "",
-         pages=None, speculative=None, experts=None) -> Report:
+         pages=None, speculative=None, experts=None, attn=None) -> Report:
     """Statically analyze a full launch tuple; returns a ``Report``.
 
     ``scan_layers`` defaults to the config's own setting; launchers that
@@ -54,6 +54,11 @@ def lint(cfg, policy: Policy, recipe=None, *, shape=None,
     the TARGET side.  ``experts`` is a dict (or duck-typed object) with
     ``cache_capacity``/``hot_experts`` when linting expert-resident MoE
     serving (QL5xx); per-expert policy rules are checked even without it.
+    ``attn`` is a dict with ``engine`` ('fixed'/'paged') and optional
+    ``kv`` (the paged engine's resolved page storage) when linting a
+    serving launch's attention-backend dispatch (QL6xx) — the QL6xx
+    checks also run without it whenever the policy requests a non-auto
+    attention backend.
     """
     ctx = {
         "arch": getattr(cfg, "name", "?"),
@@ -133,6 +138,21 @@ def lint(cfg, policy: Policy, recipe=None, *, shape=None,
 
         report.context["experts"] = experts is not None
         report.extend(expert_lint.lint_experts(cfg, policy, experts))
+
+    # --- QL6xx: attention backend -------------------------------------------
+    from repro.core.policy import policies_of
+
+    backend_requested = any(
+        getattr(p, "attn_backend", "auto") != "auto"
+        for p in policies_of(policy))
+    if attn is not None or backend_requested:
+        from repro.analysis import attn_lint
+
+        if backend_requested:
+            report.context["attn_backend"] = sorted(
+                {getattr(p, "attn_backend", "auto")
+                 for p in policies_of(policy)})
+        report.extend(attn_lint.lint_attention(cfg, policy, attn))
     return report
 
 

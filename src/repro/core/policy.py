@@ -103,6 +103,15 @@ class QuantPolicy:
     #                per-(slot, head) f32 scales): halves cache capacity
     #                and read traffic.  TransformerLM family.
     kv_cache: str = "requant"
+    # Attention backend at the block site (per-site, mirrors the qmatmul
+    # execution-backend registry — core.simulate.attn_backends):
+    #   'auto'       — module heuristics decide (reference / blockwise /
+    #                  flash when the module opts in); today's behavior.
+    #   'ref'        — force the jnp paths (never a Pallas attention kernel).
+    #   'fused'      — request the dense flash kernel where eligible.
+    #   'compressed' — contract quantized KV codes in-kernel (decode paths;
+    #                  requires int8/fp8 cache storage).
+    attn_backend: str = "auto"
 
     @property
     def enabled(self) -> bool:
@@ -355,6 +364,38 @@ def with_kv_cache(policy: Policy, mode: str) -> Policy:
     format or the stacked per-layer caches diverge in pytree structure.
     """
     return map_policies(policy, lambda p: p.replace(kv_cache=mode))
+
+
+def with_attn_backend(policy: Policy, name: str) -> Policy:
+    """Set ``attn_backend`` on EVERY entry of a map (disabled rules too).
+
+    Like ``with_kv_cache``, this must not skip disabled rules: an fp32
+    policy over int8/fp8 cache *storage* is a valid serving configuration
+    (storage keys off kv_cache alone), and the compressed backend must
+    engage at those sites too — the fp32 leg of the parity gate.
+    """
+    from repro.core.simulate import attn_backends
+
+    if name not in attn_backends():
+        raise ValueError(
+            f"unknown attention backend {name!r} "
+            f"(registered: {sorted(attn_backends())})")
+    return map_policies(policy, lambda p: p.replace(attn_backend=name))
+
+
+def attn_backend_mode(policy: Policy) -> str:
+    """The effective attention backend of a policy or map.
+
+    Mirrors ``kv_cache_mode``'s engine-global contract: entries must agree
+    (attention dispatch is per-site, but the engines' byte accounting and
+    pre-flight lint reason about one backend per serve)."""
+    modes = {getattr(p, "attn_backend", "auto")
+             for p in policies_of(policy)}
+    if len(modes) > 1:
+        raise ValueError(
+            f"policy {getattr(policy, 'name', '?')!r} mixes attention "
+            f"backends {sorted(modes)}; set one with with_attn_backend()")
+    return modes.pop()
 
 
 # ---------------------------------------------------------------------------

@@ -356,3 +356,71 @@ def qmatmul(
             y, policy.output, axis=-1, site=site + "/out", alpha=out_alpha
         )
     return y
+
+
+# ---------------------------------------------------------------------------
+# Attention-backend registry (mirror of the execution-backend registry)
+# ---------------------------------------------------------------------------
+class AttnBackend(NamedTuple):
+    """One way to execute the attention block's contractions.
+
+    ``kv_repr`` declares the KV representation the backend consumes:
+    'dense' (fp K/V, dequantized if stored quantized) or 'codes'
+    (int8/fp8 cache codes + unit scales, contracted in-kernel).
+    """
+
+    name: str
+    kv_repr: str
+    fn: Callable | None  # kernel entry; None when module heuristics decide
+
+
+_ATTN_BACKENDS: dict[str, AttnBackend] = {}
+
+
+def register_attn_backend(name: str, kv_repr: str = "dense"):
+    def deco(fn):
+        _ATTN_BACKENDS[name] = AttnBackend(name, kv_repr, fn)
+        return fn
+    return deco
+
+
+def attn_backends() -> dict[str, AttnBackend]:
+    """The registered attention backends (read-only view)."""
+    return dict(_ATTN_BACKENDS)
+
+
+def attention_backend(policy: QuantPolicy) -> AttnBackend:
+    """Look up the backend a *resolved* flat policy selects.
+
+    ``nn.attention`` resolves the PolicyMap at the block site and calls
+    this — an unknown name raises here (the registry is the source of
+    truth), the same contract ``execution_backend`` pins for matmuls.
+    """
+    name = getattr(policy, "attn_backend", "auto") or "auto"
+    if name not in _ATTN_BACKENDS:
+        raise ValueError(
+            f"unknown attention backend {name!r} "
+            f"(registered: {sorted(_ATTN_BACKENDS)})")
+    return _ATTN_BACKENDS[name]
+
+
+# 'auto' / 'ref' carry no kernel: the module's heuristics (reference /
+# blockwise / opt-in flash) or the forced-jnp path decide respectively.
+_ATTN_BACKENDS["auto"] = AttnBackend("auto", "dense", None)
+_ATTN_BACKENDS["ref"] = AttnBackend("ref", "dense", None)
+
+
+@register_attn_backend("fused")
+def _fused_attn_backend(*args, **kw):
+    """Dense Pallas flash kernel (TPU target; interpret on CPU)."""
+    from repro.kernels import ops as kops  # lazy: pallas import
+
+    return kops.flash_attention_gqa(*args, **kw)
+
+
+@register_attn_backend("compressed", kv_repr="codes")
+def _compressed_attn_backend(*args, **kw):
+    """Quantized-KV flash kernel: cache codes contracted in VMEM."""
+    from repro.kernels import ops as kops  # lazy: pallas import
+
+    return kops.flash_attention_quant_gqa(*args, **kw)

@@ -26,8 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.analysis.messages import (attention_block_message,
-                                     flash_q_offset_message)
+from repro.analysis.messages import flash_q_offset_message
 
 NEG_INF = -1e30
 
@@ -109,10 +108,15 @@ def flash_attention(
         if causal and S != T:
             raise ValueError(flash_q_offset_message(S, T))
         q_offset = 0
-    bq = min(block_q, S)
-    bk = min(block_k, T)
-    if S % bq or T % bk:
-        raise ValueError(attention_block_message(S, T, bq, bk))
+    # Block back-off (same policy as the matmul wrappers): halve the
+    # preferred block until it divides the dim.  A legal tiling always
+    # exists (fit_block bottoms out at 1), so non-multiple S/T no longer
+    # raises — attention_block_message survives only where a constraint
+    # can genuinely be unsatisfiable (grouped tilings; _blockwise).
+    from repro.kernels.ops import fit_block  # lazy: no import cycle
+
+    bq = fit_block(S, start=block_q)
+    bk = fit_block(T, start=block_k)
     k_steps = T // bk
     grid = (BH, S // bq, k_steps)
     return pl.pallas_call(

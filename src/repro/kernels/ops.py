@@ -83,6 +83,82 @@ def flash_attention_gqa(qh, kh, vh, scale: float | None = None,
     return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
 
 
+def flash_attention_quant_gqa(qh, k_codes, v_codes, k_scale, v_scale,
+                              q_pos, kv_pos, window=None,
+                              scale: float | None = None,
+                              causal: bool = True,
+                              probs_tq=None,
+                              block_q: int = 256,
+                              block_k: int = 512,
+                              single_block_max: int = 2048,
+                              interpret: bool | None = None):
+    """(B, S, H, D) GQA front-end for the quantized-KV flash kernel.
+
+    ``k_codes``/``v_codes``: (B, T, KV, D) int8/fp8 codes straight from the
+    cache (ring reshape or paged gather — never dequantized);
+    ``k_scale``/``v_scale``: (B, T, KV) f32 per-token unit scales (page
+    scales broadcast over their tokens by the caller); ``q_pos`` (B, S) /
+    ``kv_pos`` (B, T) absolute positions with -1 marking invalid KV slots;
+    ``window`` a traced sliding-window scalar (None = global).
+
+    ``probs_tq``: the policy's input TensorQuant when attention-probability
+    QDQ is active — must be an int-format ABFP quantizer (the in-kernel QDQ
+    mirrors ``core.abfp``); T is zero-padded to a multiple of its group so
+    groups tile exactly (padded positions carry ``kv_pos = -1`` and land on
+    probability 0, matching the reference's zero-padded groups bit-for-bit).
+
+    KV heads are never repeated in HBM — the kernel's index maps broadcast
+    each KV row to its G query heads.
+    """
+    from repro.kernels import flash_attention_quant as _faq_mod
+
+    interpret = should_interpret() if interpret is None else interpret
+    B, S, H, D = qh.shape
+    T, KV = k_codes.shape[1], k_codes.shape[2]
+    n = 0
+    qmax = qmin = 0.0
+    if probs_tq is not None:
+        fmt = probs_tq.fmt
+        n = int(probs_tq.group)
+        qmax, qmin = float(fmt.qmax_pos), float(fmt.qmin)
+    scale = D**-0.5 if scale is None else scale
+    if n:
+        T_pad = -(-T // n) * n
+    elif T > single_block_max:
+        T_pad = -(-T // 128) * 128  # keep fit_block away from tiny tilings
+    else:
+        T_pad = T
+    kv_pos = kv_pos.astype(jnp.int32)
+    if T_pad > T:
+        p = T_pad - T
+        k_codes = jnp.pad(k_codes, ((0, 0), (0, p), (0, 0), (0, 0)))
+        v_codes = jnp.pad(v_codes, ((0, 0), (0, p), (0, 0), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, p), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, p), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, p)), constant_values=-1)
+    bq = fit_block(S, start=block_q)
+    if T_pad <= single_block_max:
+        bk = 0  # single KV block: the exact (serving) body, K/V read once
+    else:
+        bk = fit_block(T_pad, start=block_k, multiple=n if n else 1)
+    if window is None:
+        window = T + S + 1  # > any position delta: global attention
+    win = jnp.asarray(window, jnp.int32).reshape(1, 1)
+    q = qh.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kc = k_codes.transpose(0, 2, 1, 3).reshape(B * KV, T_pad, D)
+    vc = v_codes.transpose(0, 2, 1, 3).reshape(B * KV, T_pad, D)
+    ks = k_scale.transpose(0, 2, 1).reshape(B * KV, T_pad, 1)
+    vs = v_scale.transpose(0, 2, 1).reshape(B * KV, T_pad, 1)
+    o = _faq_mod.flash_attention_quant(
+        q, kc, vc, ks.astype(jnp.float32), vs.astype(jnp.float32),
+        q_pos.astype(jnp.int32)[:, :, None], kv_pos[:, None, :], win,
+        scale=scale, causal=causal, h=H, kv=KV, probs_n=n,
+        probs_qmax=qmax, probs_qmin=qmin, block_q=bq, block_k=bk,
+        interpret=interpret,
+    )
+    return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
 def abfp_matmul_fused(x, w, policy: QuantPolicy,
                       interpret: bool | None = None):
     """Dispatch the fused kernel for a (…, K) x (K, N) quantized matmul."""

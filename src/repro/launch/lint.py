@@ -26,7 +26,8 @@ import sys
 
 def preflight(cfg, policy, recipe=None, *, shape=None, compress=False,
               prequant=False, scan_layers=None, pages=None, speculative=None,
-              experts=None, where="launch", out=sys.stderr) -> None:
+              experts=None, attn=None, where="launch",
+              out=sys.stderr) -> None:
     """Launcher gate: lint the tuple; SystemExit(2) on any error.
 
     Warnings and infos are printed to ``out`` and the launch proceeds.
@@ -37,12 +38,14 @@ def preflight(cfg, policy, recipe=None, *, shape=None, compress=False,
     carries {draft_policy, draft_k} for a speculative launch (QL4xx);
     ``policy`` is then the target side.  ``experts`` carries
     {cache_capacity, hot_experts} for expert-resident MoE serving (QL5xx).
+    ``attn`` carries {engine, kv} for a serving launch's attention-backend
+    dispatch checks (QL6xx).
     """
     from repro.analysis.qlint import lint
 
     report = lint(cfg, policy, recipe, shape=shape, compress=compress,
                   prequant=prequant, scan_layers=scan_layers, pages=pages,
-                  speculative=speculative, experts=experts)
+                  speculative=speculative, experts=experts, attn=attn)
     if report.errors:
         print(f"qlint: {where} blocked by "
               f"{len(report.errors)} error(s):", file=out)

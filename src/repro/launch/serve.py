@@ -64,6 +64,14 @@ def main() -> int:
                     choices=("auto", "fp", "int8", "fp8"),
                     help="page storage format (--paged); 'auto' follows "
                     "the policy's kv_cache mode")
+    ap.add_argument("--attn-backend", default="auto",
+                    choices=("auto", "ref", "fused", "compressed"),
+                    help="attention-backend dispatch at the attention "
+                    "block sites: 'compressed' contracts stored int8/fp8 "
+                    "KV codes inside the quantized flash kernel (needs "
+                    "quantized storage — QL601), 'fused' runs the dense "
+                    "Pallas kernel where eligible, 'ref' pins the jnp "
+                    "path, 'auto' keeps the module defaults")
     ap.add_argument("--speculate", action="store_true",
                     help="speculative serving: a compressed low-precision "
                     "draft (same param tree, --draft-preset policy) "
@@ -113,6 +121,10 @@ def main() -> int:
     # an explicit --policy wins; otherwise the recipe's paired policy
     policy_name = args.policy or (rec.policy_preset if rec else None) or "fp32"
     policy = preset(policy_name, n_layers=cfg.n_layers)
+    if args.attn_backend != "auto":
+        from repro.core.policy import with_attn_backend
+
+        policy = with_attn_backend(policy, args.attn_backend)
     if has_layer_rules(policy):
         # layer-indexed PolicyMap rules need per-layer sites (eager unroll)
         cfg = cfg.replace(scan_layers=False)
@@ -150,13 +162,17 @@ def main() -> int:
             cfg = cfg.replace(scan_layers=False)
         speculative = {"draft_policy": draft_policy,
                        "draft_k": args.draft_k}
+    attn_ctx = {"engine": "paged" if args.paged else "fixed"}
+    if args.paged and args.kv != "auto":
+        attn_ctx["kv"] = args.kv
     if not args.no_lint:
         # pre-flight gate: errors abort before any weights are built
         from repro.launch.lint import preflight
 
         preflight(cfg, policy, rec, compress=args.compress,
                   scan_layers=cfg.scan_layers, pages=pages_geo,
-                  speculative=speculative, experts=experts, where="serve")
+                  speculative=speculative, experts=experts, attn=attn_ctx,
+                  where="serve")
     model = build_model(cfg)
     params = unbox(model.init(jax.random.PRNGKey(args.seed)))
     if rec is not None:
@@ -345,6 +361,10 @@ def main() -> int:
             "resident_ratio": round(estats["ratio"], 4),
             "sites": estats["sites"],
         }
+    attn_info = {"attention": {
+        "backend": getattr(engine, "attn_backend", "auto"),
+        "engine": "paged" if args.paged else "fixed",
+    }}
     paged_info = {}
     if args.paged and not args.speculate:
         stats = engine.page_stats()
@@ -374,6 +394,7 @@ def main() -> int:
                 **compress_info,
                 **expert_info,
                 **spec_info,
+                **attn_info,
                 **paged_info,
             }
         )

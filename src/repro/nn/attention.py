@@ -29,9 +29,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.messages import attention_block_message
+from repro.analysis.messages import (attention_block_message,
+                                     compressed_attn_storage_message)
 from repro.core.policy import Policy, resolve_policy
-from repro.core.simulate import qdq_activation
+from repro.core.simulate import attention_backend, attn_backends, \
+    qdq_activation
 from repro.dist import sharding as shd
 from repro.nn.linear import Dense
 from repro.nn.module import Box
@@ -228,6 +230,56 @@ class Attention:
                                 alpha=geta("bmm_v"))
         return qh, kh, vh
 
+    # ------------------------------------------- attention-backend dispatch
+    def _attn_probs_tq(self, pol):
+        """The probs/q quantizer when attention-BMM QDQ is active."""
+        if pol.enabled and pol.attn_bmm and pol.input is not None:
+            return pol.input
+        return None
+
+    def _compressed_eligible(self, pol) -> bool:
+        """Can the quantized-KV kernel reproduce the QDQ-sim path here?
+
+        Softcap has no kernel body, and the in-kernel probs QDQ mirrors
+        int-format ABFP with BF16 scales only — anything else silently
+        falls back to the dequantize-then-reference path (the QL602 lint
+        is the signal for that degradation).
+        """
+        if self.softcap is not None:
+            return False
+        tq = self._attn_probs_tq(pol)
+        if tq is None:
+            return True
+        from repro.core.formats import IntFormat
+
+        return (tq.scaler == "abfp" and bool(tq.group)
+                and isinstance(tq.fmt, IntFormat)
+                and jnp.dtype(tq.scale_dtype) == jnp.bfloat16)
+
+    def _quant_q(self, pol, qh, q):
+        """The q-operand half of ``_maybe_quant_qkv`` (kernel callers QDQ
+        q outside the kernel; K/V arrive pre-quantized as cache codes)."""
+        tq = self._attn_probs_tq(pol)
+        if tq is None:
+            return qh
+        alpha = None if q is None else (q.get("bmm_q") or {}).get("in_alpha")
+        return qdq_activation(qh, tq, axis=-1, site=self.name + "/bmm_q",
+                              alpha=alpha)
+
+    def _use_compressed(self, pol, *, mode: str, where: str) -> bool:
+        """Decode-path dispatch: contract cache codes in-kernel?
+
+        ``mode`` is the cache's actual storage format ('fp'/'int8'/'fp8').
+        Raises on compressed-over-fp-storage (the QL601 contract — there
+        are no codes to contract); returns False for the silent-fallback
+        cases QL602 flags (softcap / unsupported probs quantizer).
+        """
+        if attention_backend(pol).name != "compressed":
+            return False
+        if mode not in ("int8", "fp8"):
+            raise ValueError(compressed_attn_storage_message(mode, where))
+        return self._compressed_eligible(pol)
+
     # -------------------------------------------------- reference attention
     def _reference(self, qh, kh, vh, q_pos, kv_pos, window, policy,
                    q=None, kv_prequant: bool = False):
@@ -383,8 +435,15 @@ class Attention:
             and S % min(self.q_block, S) == 0
             and T % min(self.kv_block, T) == 0
         )
+        # Per-site backend (registry-validated): 'auto' keeps the module's
+        # opt-in flag; 'fused'/'compressed' request the flash kernel
+        # ('compressed' has no stored codes at prefill — dense flash is its
+        # eligible prefill form); 'ref' pins the jnp paths.
+        backend = attention_backend(pol).name
+        flash_want = (self.use_flash_kernel if backend == "auto"
+                      else backend in ("fused", "compressed"))
         flash_ok = (
-            self.use_flash_kernel
+            flash_want
             and self.softcap is None
             and kv_override is None
             and S == T  # self-attention, standard causal layout
@@ -392,9 +451,7 @@ class Attention:
                      and pol.input is not None)
         )
         if flash_ok:
-            from repro.kernels import ops as kops
-
-            out = kops.flash_attention_gqa(
+            out = attn_backends()["fused"].fn(
                 qh, kh, vh, scale=self._scale(), causal=self.causal,
                 block_q=min(self.q_block, S), block_k=min(self.kv_block, T),
                 q_offset=0,  # full-sequence self-attention: q starts at 0
@@ -572,20 +629,32 @@ class Attention:
         slot_pos = jnp.where(slot_pos < 0, -1, slot_pos)  # unwritten
 
         dt = jnp.dtype(self.dtype)
-        if int8_cache:
-            kv = _kv_dequantize(cache.k, cache.k_scale, self.n_kv,
-                                self.head_dim, dt)
-            vv = _kv_dequantize(cache.v, cache.v_scale, self.n_kv,
-                                self.head_dim, dt)
-        else:
-            kv = cache.k.reshape(B, size, self.n_kv, self.head_dim)
-            vv = cache.v.reshape(B, size, self.n_kv, self.head_dim)
         if window is None:
             window = jnp.asarray(size + 1, jnp.int32)
         qp = pos_vec[:, None]
         kp = slot_pos
-        out = self._reference(qh, kv, vv, qp, kp, window, policy, q=q,
-                              kv_prequant=kv_on_write or int8_cache)
+        if self._use_compressed(pol, mode="int8" if int8_cache else "fp",
+                                where="the ring-buffer cache"):
+            # codes go straight to the kernel: HBM reads stay 1 byte/elem
+            out = attn_backends()["compressed"].fn(
+                self._quant_q(pol, qh, q),
+                cache.k.reshape(B, size, self.n_kv, self.head_dim),
+                cache.v.reshape(B, size, self.n_kv, self.head_dim),
+                cache.k_scale, cache.v_scale, qp, kp, window,
+                scale=self._scale(), causal=self.causal,
+                probs_tq=self._attn_probs_tq(pol),
+            ).astype(dt)
+        else:
+            if int8_cache:
+                kv = _kv_dequantize(cache.k, cache.k_scale, self.n_kv,
+                                    self.head_dim, dt)
+                vv = _kv_dequantize(cache.v, cache.v_scale, self.n_kv,
+                                    self.head_dim, dt)
+            else:
+                kv = cache.k.reshape(B, size, self.n_kv, self.head_dim)
+                vv = cache.v.reshape(B, size, self.n_kv, self.head_dim)
+            out = self._reference(qh, kv, vv, qp, kp, window, policy, q=q,
+                                  kv_prequant=kv_on_write or int8_cache)
         o_dense = Dense(
             self.n_heads * self.head_dim, self.d_model,
             in_axis="qkv", out_axis="embed",
@@ -686,19 +755,30 @@ class Attention:
         slot_pos = jnp.where(slot_pos < 0, -1, slot_pos)
 
         dt = jnp.dtype(self.dtype)
-        if int8_cache:
-            kv = _kv_dequantize(cache.k, cache.k_scale, self.n_kv,
-                                self.head_dim, dt)
-            vv = _kv_dequantize(cache.v, cache.v_scale, self.n_kv,
-                                self.head_dim, dt)
-        else:
-            kv = cache.k.reshape(B, size, self.n_kv, self.head_dim)
-            vv = cache.v.reshape(B, size, self.n_kv, self.head_dim)
         if window is None:
             window = jnp.asarray(size + 1, jnp.int32)
-        out = self._reference(qh, kv, vv, positions, slot_pos, window,
-                              policy, q=q,
-                              kv_prequant=kv_on_write or int8_cache)
+        if self._use_compressed(pol, mode="int8" if int8_cache else "fp",
+                                where="the ring-buffer cache"):
+            out = attn_backends()["compressed"].fn(
+                self._quant_q(pol, qh, q),
+                cache.k.reshape(B, size, self.n_kv, self.head_dim),
+                cache.v.reshape(B, size, self.n_kv, self.head_dim),
+                cache.k_scale, cache.v_scale, positions, slot_pos, window,
+                scale=self._scale(), causal=self.causal,
+                probs_tq=self._attn_probs_tq(pol),
+            ).astype(dt)
+        else:
+            if int8_cache:
+                kv = _kv_dequantize(cache.k, cache.k_scale, self.n_kv,
+                                    self.head_dim, dt)
+                vv = _kv_dequantize(cache.v, cache.v_scale, self.n_kv,
+                                    self.head_dim, dt)
+            else:
+                kv = cache.k.reshape(B, size, self.n_kv, self.head_dim)
+                vv = cache.v.reshape(B, size, self.n_kv, self.head_dim)
+            out = self._reference(qh, kv, vv, positions, slot_pos, window,
+                                  policy, q=q,
+                                  kv_prequant=kv_on_write or int8_cache)
         o_dense = Dense(
             self.n_heads * self.head_dim, self.d_model,
             in_axis="qkv", out_axis="embed",
@@ -872,32 +952,53 @@ class Attention:
         # gather the row's pages in logical order -> contiguous (B, T, ...)
         T = NL * ps
         phys_tab = jnp.where(page_table >= 0, page_table, trash)  # (B, NL)
-        gk = cache.k[phys_tab]  # (B, NL, ps, F)
-        gv = cache.v[phys_tab]
-        if mode != "fp":
-            sk = cache.k_scale[phys_tab][:, :, None, :, None]  # (B,NL,1,KV,1)
-            sv = cache.v_scale[phys_tab][:, :, None, :, None]
-            gk = gk.reshape(B, NL, ps, self.n_kv, self.head_dim)
-            gv = gv.reshape(B, NL, ps, self.n_kv, self.head_dim)
-            gk = (gk.astype(jnp.float32) * sk).astype(jnp.dtype(self.dtype))
-            gv = (gv.astype(jnp.float32) * sv).astype(jnp.dtype(self.dtype))
-        gk = gk.reshape(B, T, self.n_kv, self.head_dim)
-        gv = gv.reshape(B, T, self.n_kv, self.head_dim)
-
         idx = jnp.arange(T, dtype=jnp.int32)[None]  # (1, T) absolute pos
         mapped = jnp.take_along_axis(
             page_table, jnp.broadcast_to(idx // ps, (B, T)), axis=1) >= 0
         n_ctx = position + n_valid  # tokens visible after this write
         valid = (idx < n_ctx[:, None]) & mapped
         kv_pos = jnp.where(valid, idx, -1)
-        # zero-mask: requant group maxima must see zeros, never trash data
-        gk = gk * valid[..., None, None].astype(gk.dtype)
-        gv = gv * valid[..., None, None].astype(gv.dtype)
-
         if window is None:
             window = jnp.asarray(T + 1, jnp.int32)
-        out = self._reference(qh, gk, gv, positions, kv_pos, window, policy,
-                              q=q, kv_prequant=kv_on_write or mode != "fp")
+        if self._use_compressed(pol, mode=mode, where="the paged KV pool"):
+            # gather CODES only — no dequantized dense copy, no zero-mask:
+            # invalid/trash positions carry kv_pos = -1, which the kernel
+            # turns into probability-exactly-0 (trash never reaches the
+            # output), and the page scales broadcast over their tokens.
+            gk = cache.k[phys_tab].reshape(B, T, self.n_kv, self.head_dim)
+            gv = cache.v[phys_tab].reshape(B, T, self.n_kv, self.head_dim)
+            sk = jnp.broadcast_to(
+                cache.k_scale[phys_tab][:, :, None, :],
+                (B, NL, ps, self.n_kv)).reshape(B, T, self.n_kv)
+            sv = jnp.broadcast_to(
+                cache.v_scale[phys_tab][:, :, None, :],
+                (B, NL, ps, self.n_kv)).reshape(B, T, self.n_kv)
+            out = attn_backends()["compressed"].fn(
+                self._quant_q(pol, qh, q), gk, gv, sk, sv,
+                positions, kv_pos, window,
+                scale=self._scale(), causal=self.causal,
+                probs_tq=self._attn_probs_tq(pol),
+            ).astype(jnp.dtype(self.dtype))
+        else:
+            gk = cache.k[phys_tab]  # (B, NL, ps, F)
+            gv = cache.v[phys_tab]
+            if mode != "fp":
+                sk = cache.k_scale[phys_tab][:, :, None, :, None]
+                sv = cache.v_scale[phys_tab][:, :, None, :, None]
+                gk = gk.reshape(B, NL, ps, self.n_kv, self.head_dim)
+                gv = gv.reshape(B, NL, ps, self.n_kv, self.head_dim)
+                gk = (gk.astype(jnp.float32) * sk).astype(
+                    jnp.dtype(self.dtype))
+                gv = (gv.astype(jnp.float32) * sv).astype(
+                    jnp.dtype(self.dtype))
+            gk = gk.reshape(B, T, self.n_kv, self.head_dim)
+            gv = gv.reshape(B, T, self.n_kv, self.head_dim)
+            # zero-mask: requant group maxima must see zeros, never trash
+            gk = gk * valid[..., None, None].astype(gk.dtype)
+            gv = gv * valid[..., None, None].astype(gv.dtype)
+            out = self._reference(qh, gk, gv, positions, kv_pos, window,
+                                  policy, q=q,
+                                  kv_prequant=kv_on_write or mode != "fp")
         o_dense = Dense(
             self.n_heads * self.head_dim, self.d_model,
             in_axis="qkv", out_axis="embed",

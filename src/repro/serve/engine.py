@@ -56,10 +56,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import Policy, QuantPolicy, kv_cache_mode
+from repro.analysis import messages as msg
+from repro.core.policy import (Policy, QuantPolicy, attn_backend_mode,
+                               kv_cache_mode)
 from repro.models.lm import DecodeState
 from repro.serve import steps as serve_steps
-from repro.serve.kv_pages import (PageGeometry, PagePool, check_geometry,
+from repro.serve.kv_pages import (PageGeometry, PagePool,
+                                  attention_read_bytes, check_geometry,
                                   pages_for, resident_kv_bytes)
 
 
@@ -279,9 +282,13 @@ class ServeEngine(_EngineBase):
         mode = kv_cache_mode(policy)  # engine-global cache storage: fail
         # fast on maps whose rules disagree on kv_cache
         if mode == "fp8":
-            raise ValueError(
-                "kv_cache='fp8' is paged-only (the ring-buffer cache has no "
-                "fp8 storage); serve this policy with PagedServeEngine")
+            raise ValueError(msg.fp8_fixed_slot_message())
+        self.attn_backend = attn_backend_mode(policy)
+        if self.attn_backend == "compressed" and mode != "int8":
+            # the decode path would raise this at trace time anyway (QL601);
+            # failing here keeps it out of the jit cache
+            raise ValueError(msg.compressed_attn_storage_message(
+                mode, "the ring-buffer cache"))
         self.weight_bytes = None
         if compress:
             from repro.models import serving_transforms as st
@@ -513,6 +520,11 @@ class PagedServeEngine(_EngineBase):
         check_geometry(geo)
         self.geometry = geo
         self.kv = kv
+        self.attn_backend = attn_backend_mode(policy)
+        if self.attn_backend == "compressed" and kv == "fp":
+            # fail at construction, not at trace time inside paged_step
+            raise ValueError(msg.compressed_attn_storage_message(
+                "fp", "the paged KV pool"))
 
         self.weight_bytes = None
         if compress:
@@ -682,9 +694,20 @@ class PagedServeEngine(_EngineBase):
 
     def kv_bytes(self) -> dict:
         """Resident KV bytes at the CURRENT pool occupancy (see
-        ``kv_pages.resident_kv_bytes`` for the equivalents)."""
+        ``kv_pages.resident_kv_bytes`` for the equivalents), plus the
+        attention-path *read* accounting: the bytes one decode step pulls
+        from the KV store, which depends on the attention backend — the
+        compressed backend reads codes + page scales only, while the
+        QDQ-sim paths also materialize a dense round-trip copy."""
         c = self.model.cfg
-        return resident_kv_bytes(
+        out = resident_kv_bytes(
             self.pool.in_use, page_size=self.geometry.page_size,
             n_kv=c.n_kv, head_dim=c.head_dim_, n_layers=c.n_layers,
             kv=self.kv, fp_bytes=jnp.dtype(c.dtype).itemsize)
+        out.update(attention_read_bytes(
+            self.pool.in_use * self.geometry.page_size,
+            n_kv=c.n_kv, head_dim=c.head_dim_, n_layers=c.n_layers,
+            kv=self.kv, backend=self.attn_backend,
+            fp_bytes=jnp.dtype(c.dtype).itemsize,
+            page_size=self.geometry.page_size))
+        return out

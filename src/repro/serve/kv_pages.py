@@ -178,3 +178,54 @@ def resident_kv_bytes(n_pages_in_use: int, page_size: int, n_kv: int,
         out["kv_vs_fp16_ratio"] = round(
             out["kv_code_bytes"] / out["kv_fp16_equiv_bytes"], 4)
     return out
+
+
+def attention_read_bytes(n_tokens: int, n_kv: int, head_dim: int,
+                         n_layers: int, kv: str, backend: str,
+                         fp_bytes: int = 4, page_size: int = 16) -> dict:
+    """Attention-path HBM bytes one decode step READS from the KV store.
+
+    ``resident_kv_bytes`` answers "what fits"; this answers "what moves".
+    A decode step's attention contracts the whole resident context
+    (``n_tokens`` K+V entries per layer), and *which bytes* cross HBM
+    depends on the attention backend:
+
+      * ``compressed`` — the kernel consumes stored codes directly:
+        1 byte/element plus the per-(page, head) scales, nothing else.
+      * any QDQ-sim backend (``auto``/``ref``/``fused``) over quantized
+        storage — the codes are read AND a dense fp dequantized copy is
+        materialized (written then re-read by the contraction), so the
+        traffic is codes + scales + 2x the dense equivalent.
+      * fp storage — the dense entries at the engine dtype.
+
+    Keys mirror the resident accounting: ``attn_kv_read_bytes`` (total),
+    ``attn_code_read_bytes`` / ``attn_scale_read_bytes`` (quantized modes),
+    ``attn_fp16_equiv_read_bytes`` (what a dense fp16 read path would
+    move) and ``attn_vs_fp16_read_ratio``.  The attn_table claim —
+    compressed attention moves <= 0.5x the dense-fp16 read path — is
+    ``attn_code_read_bytes <= 0.5 * attn_fp16_equiv_read_bytes``: exact
+    for 1-byte codes, with the page scales amortizing to metadata.
+    """
+    elems = 2 * n_tokens * n_kv * head_dim * n_layers  # K and V, all layers
+    fp16_equiv = elems * 2
+    quantized = kv in ("int8", "fp8")
+    scale_bytes = (pages_for(n_tokens, page_size) * 2 * n_kv * n_layers * 4
+                   if quantized else 0)
+    if backend == "compressed":
+        code = elems
+        total = code + scale_bytes
+    elif quantized:
+        code = elems
+        total = code + scale_bytes + 2 * elems * fp_bytes  # dense round-trip
+    else:
+        code = 0
+        total = elems * fp_bytes
+    out = {
+        "attn_kv_read_bytes": total,
+        "attn_code_read_bytes": code,
+        "attn_scale_read_bytes": scale_bytes,
+        "attn_fp16_equiv_read_bytes": fp16_equiv,
+    }
+    if fp16_equiv:
+        out["attn_vs_fp16_read_ratio"] = round(total / fp16_equiv, 4)
+    return out

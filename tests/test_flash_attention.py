@@ -178,3 +178,14 @@ def test_attention_flash_falls_back_on_softcap():
     got = fl.apply(params, x, positions=pos, policy=QuantPolicy())
     np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
                                rtol=1e-6, atol=1e-7)
+
+
+def test_flash_fit_block_backoff_non_aligned():
+    """S=96 does not divide the default 128-blocks; fit_block now backs the
+    tiling off (96 -> 32) instead of raising, and the result still matches
+    the oracle."""
+    q, k, v = _rand(2, 96, 96, 32, seed=12)
+    got = flash_attention(q, k, v, interpret=True)
+    want = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
